@@ -1,0 +1,87 @@
+"""Roofline report: reads artifacts/dryrun/*.json into the §Roofline tables.
+
+  python -m benchmarks.roofline [--mesh pod|multipod] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ART = Path("artifacts/dryrun")
+
+
+def load(mesh: str = "pod"):
+    rows = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        rows.append(rec)
+    return rows
+
+
+def fmt_s(x):
+    return f"{x:.3e}"
+
+
+def table(mesh: str = "pod", markdown: bool = True):
+    rows = load(mesh)
+    out = []
+    header = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "bound s | 6ND/HLO | HBM GB/dev | status |"
+    )
+    out.append(header)
+    out.append("|" + "---|" * 10)
+    for rec in rows:
+        arch, shape = rec["arch"], rec["shape"]
+        if rec.get("status") != "ok":
+            out.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | {rec['status']} |")
+            continue
+        r = rec["roofline"]
+        mem = rec["memory_analysis"].get("peak_live_bytes_est", 0) / 1e9
+        useful = rec.get("useful_flops_ratio")
+        useful_s = f"{useful:.2f}" if useful is not None else "—"
+        out.append(
+            f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | {r['dominant']} | {fmt_s(r['bound_s'])} | "
+            f"{useful_s} | {mem:.2f} | ok |"
+        )
+    return "\n".join(out)
+
+
+def summary(mesh: str = "pod"):
+    rows = [r for r in load(mesh) if r.get("status") == "ok"]
+    by_dom = {}
+    for r in rows:
+        by_dom.setdefault(r["roofline"]["dominant"], []).append(
+            (r["arch"], r["shape"], r["roofline"]["bound_s"])
+        )
+    lines = [f"{len(rows)} compiled cells on mesh={mesh}"]
+    for dom, cells in sorted(by_dom.items()):
+        lines.append(f"  {dom}-bound: {len(cells)} cells")
+    # worst roofline_fraction (most headroom if terms could overlap)
+    worst = sorted(rows, key=lambda r: r["roofline"]["roofline_fraction"])[:5]
+    lines.append("  lowest overlap-fraction cells (hillclimb candidates):")
+    for r in worst:
+        lines.append(
+            f"    {r['arch']} × {r['shape']}: fraction "
+            f"{r['roofline']['roofline_fraction']:.2f} dominant={r['roofline']['dominant']}"
+        )
+    coll = sorted(rows, key=lambda r: -r["roofline"]["collective_s"])[:3]
+    lines.append("  most collective-bound:")
+    for r in coll:
+        lines.append(f"    {r['arch']} × {r['shape']}: {r['roofline']['collective_s']:.3e}s")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    args = ap.parse_args()
+    print(summary(args.mesh))
+    print()
+    print(table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

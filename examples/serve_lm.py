@@ -1,0 +1,60 @@
+"""Batched LM serving on the StatefulDecoder engine (prefill → decode).
+
+Demonstrates the unified serving substrate that also runs the SimNet
+parallel simulator (DESIGN.md §2).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_reduced_config
+from repro.models.registry import build_model
+from repro.serving.engine import DecodeEngine, lm_decoder
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    batch = {"tokens": prompts}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.enc_seq, cfg.d_model)
+        )
+    print(f"prefill {args.batch}×{args.prompt_len} ({cfg.name}, reduced config)…")
+    logits, state = model.prefill(params, batch)
+    # prefill state is sized to the prompt; re-home it into a longer cache
+    full = model.init_decode_state(args.batch, args.prompt_len + args.gen)
+    for k in state:
+        if k == "pos":
+            full["pos"] = state["pos"]
+        elif k in full and hasattr(full[k], "shape") and full[k].shape != state[k].shape:
+            sl = tuple(slice(0, s) for s in state[k].shape)
+            full[k] = full[k].at[sl].set(state[k])
+        else:
+            full[k] = state[k]
+
+    engine = DecodeEngine(lm_decoder(model), params)
+    first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    tokens, _, tps = engine.generate(full, first, args.gen)
+    print(f"generated {tokens.shape[0]} tokens × {tokens.shape[1]} requests "
+          f"at {tps:.0f} tok/s (1-core CPU)")
+    print("first request:", tokens[:, 0].tolist())
+
+
+if __name__ == "__main__":
+    main()

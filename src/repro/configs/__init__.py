@@ -1,0 +1,14 @@
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig, MULTI_POD, SINGLE_POD, reduced
+from repro.configs.shapes import LONG_CONTEXT_OK, SHAPES, shape_applicable
+
+__all__ = [
+    "MeshConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "MULTI_POD",
+    "SINGLE_POD",
+    "reduced",
+    "SHAPES",
+    "LONG_CONTEXT_OK",
+    "shape_applicable",
+]

@@ -1,0 +1,227 @@
+"""SimNet public API: generate traces, train predictors, simulate programs.
+
+This is the composable entry point the examples and benchmarks use:
+
+    traces = api.generate_traces(["mlb_stream", ...], n_instructions=100_000)
+    data   = api.build_training_data(traces)
+    params, hist = api.train_predictor(data, PredictorConfig(kind="c3"))
+    result = api.simulate(trace, params, pcfg, n_lanes=64)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+from repro.core.dataset import build_dataset, ithemal_samples
+from repro.core.predictor import (
+    N_HEADS,
+    PredictorConfig,
+    apply_raw,
+    decode_latency,
+    init_predictor,
+    make_predict_fn,
+    split_heads,
+)
+from repro.core.simulator import SimConfig, simulate_trace
+from repro.des.o3 import O3Config, O3Simulator
+from repro.des.trace import Trace
+from repro.des.workloads import get_benchmark
+from repro.training.optimizer import AdamConfig, adam_init, adam_update
+
+
+def generate_traces(
+    benchmarks: Sequence[str],
+    n_instructions: int,
+    o3: Optional[O3Config] = None,
+    cache_dir: Optional[str] = None,
+) -> List[Trace]:
+    """Run the reference DES over benchmarks (with optional npz caching)."""
+    o3 = o3 or O3Config()
+    sim = O3Simulator(o3)
+    out = []
+    for name in benchmarks:
+        if cache_dir:
+            p = Path(cache_dir) / f"{name}_{o3.name}_{n_instructions}.npz"
+            if p.exists():
+                out.append(Trace.load(p))
+                continue
+        prog = get_benchmark(name, n_instructions)
+        tr = sim.run(prog)
+        if cache_dir:
+            Path(cache_dir).mkdir(parents=True, exist_ok=True)
+            tr.save(p)
+        out.append(tr)
+    return out
+
+
+def build_training_data(traces, sim_cfg: Optional[SimConfig] = None, **kw):
+    return build_dataset(traces, sim_cfg or SimConfig(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def _hybrid_loss(raw, y, pcfg: PredictorConfig):
+    """Per-head hybrid CE+MSE (paper §2.4: CE for classification output,
+    squared error for regression). Regression in REG_SCALE space keeps the
+    two terms comparable (raw-cycle MSE would swamp the CE)."""
+    from repro.core.predictor import REG_SCALE
+
+    cls_logits, reg = split_heads(raw, pcfg)
+    y = y.astype(jnp.float32)
+    se = jnp.mean(jnp.square(reg - y * REG_SCALE))
+    if cls_logits is None:
+        return se
+    n_cls = pcfg.n_classes
+    t_int = jnp.clip(y, 0, None).astype(jnp.int32)
+    overflow = t_int >= (n_cls - 1)
+    target = jnp.where(overflow, n_cls - 1, t_int)
+    logp = jax.nn.log_softmax(cls_logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(target, n_cls, dtype=jnp.float32)
+    ce = -jnp.mean(jnp.sum(logp * onehot, axis=-1))
+    return ce + se
+
+
+def train_predictor(
+    data: Dict[str, np.ndarray],
+    pcfg: PredictorConfig,
+    *,
+    epochs: int = 10,
+    batch_size: int = 512,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 0,
+) -> tuple:
+    """Adam training of a latency predictor. Returns (params, history)."""
+    params, _ = init_predictor(jax.random.PRNGKey(seed), pcfg)
+    acfg = AdamConfig(lr=lr, clip_norm=1.0)
+    opt = adam_init(params)
+
+    def loss_fn(p, x, y):
+        raw = apply_raw(p, x, pcfg)
+        return _hybrid_loss(raw, y, pcfg)
+
+    @jax.jit
+    def step(p, opt, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, opt, _ = adam_update(grads, opt, p, acfg)
+        return p, opt, loss
+
+    @jax.jit
+    def eval_loss(p, x, y):
+        return loss_fn(p, x, y)
+
+    X, Y = data["train_x"], data["train_y"]
+    n = len(X)
+    rng = np.random.default_rng(seed)
+    history = {"train_loss": [], "val_loss": []}
+    best = (np.inf, params)
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        losses = []
+        for lo in range(0, n - batch_size + 1, batch_size):
+            idx = perm[lo : lo + batch_size]
+            x = jnp.asarray(X[idx], jnp.float32)
+            y = jnp.asarray(Y[idx])
+            params, opt, l = step(params, opt, x, y)
+            losses.append(float(l))
+        vl = []
+        for lo in range(0, len(data["val_x"]) - batch_size + 1, batch_size):
+            vl.append(float(eval_loss(
+                params,
+                jnp.asarray(data["val_x"][lo : lo + batch_size], jnp.float32),
+                jnp.asarray(data["val_y"][lo : lo + batch_size]),
+            )))
+        tl, vloss = float(np.mean(losses)), float(np.mean(vl)) if vl else float("nan")
+        history["train_loss"].append(tl)
+        history["val_loss"].append(vloss)
+        if vloss < best[0]:
+            best = (vloss, jax.tree_util.tree_map(lambda a: a.copy(), params))
+        if log_every and (ep % log_every == 0):
+            print(f"  epoch {ep}: train {tl:.4f} val {vloss:.4f}")
+    return best[1], history
+
+
+def prediction_errors(params, pcfg: PredictorConfig, X, Y, batch_size: int = 1024):
+    """Paper's per-latency-type error: E = |pred - y| / (y + 1), averaged."""
+    @jax.jit
+    def pred(x):
+        return decode_latency(apply_raw(params, x, pcfg), pcfg)
+
+    errs = []
+    for lo in range(0, len(X), batch_size):
+        x = jnp.asarray(X[lo : lo + batch_size], jnp.float32)
+        y = Y[lo : lo + batch_size]
+        p = np.asarray(pred(x))
+        errs.append(np.abs(p - y) / (y + 1.0))
+    e = np.concatenate(errs)
+    return {"fetch": float(e[:, 0].mean()), "execution": float(e[:, 1].mean()), "store": float(e[:, 2].mean())}
+
+
+# ---------------------------------------------------------------------------
+# simulation
+# ---------------------------------------------------------------------------
+
+def simulate(
+    trace: Trace,
+    params,
+    pcfg: PredictorConfig,
+    sim_cfg: Optional[SimConfig] = None,
+    n_lanes: int = 16,
+    use_kernel: bool = False,
+) -> Dict:
+    """ML-based simulation of a trace (history features already inside).
+
+    Returns total cycles, CPI, error vs the DES labels (if present), and
+    measured simulation throughput (paper Figs. 8-10).
+    """
+    sim_cfg = sim_cfg or SimConfig(ctx_len=pcfg.ctx_len)
+    arrs = F.trace_arrays(trace)
+    predict = make_predict_fn(params, pcfg, use_kernel=use_kernel)
+    run = jax.jit(lambda: simulate_trace(arrs, predict, sim_cfg, n_lanes))
+    res = run()  # compile+run
+    jax.block_until_ready(res["total_cycles"])
+    t0 = time.time()
+    res = run()
+    jax.block_until_ready(res["total_cycles"])
+    dt = time.time() - t0
+    total = float(res["total_cycles"])
+    n = res["n_instructions"]
+    out = {
+        "total_cycles": total,
+        "cpi": total / n,
+        "n_instructions": n,
+        "n_lanes": n_lanes,
+        "throughput_ips": n / dt,
+        "seconds": dt,
+        "overflow": int(res["overflow"]),
+    }
+    if trace.fetch_lat.any():
+        ref = trace.total_cycles
+        out["des_cycles"] = ref
+        out["des_cpi"] = ref / trace.n
+        out["cpi_error"] = abs(total / n - ref / trace.n) / (ref / trace.n)
+    return out
+
+
+def phase_cpis(trace: Trace, params, pcfg, sim_cfg=None, n_lanes=16, window=10000):
+    """Per-window CPI curves (paper Fig. 6): returns (simnet, des) arrays."""
+    sim_cfg = sim_cfg or SimConfig(ctx_len=pcfg.ctx_len)
+    arrs = F.trace_arrays(trace)
+    predict = make_predict_fn(params, pcfg)
+    res = jax.jit(lambda: simulate_trace(arrs, predict, sim_cfg, n_lanes))()
+    lats = np.asarray(res["outs"]["lats"])  # (per, L, 3)
+    fetch = np.swapaxes(lats[:, :, 0], 0, 1).reshape(-1)  # lane-major timeline
+    des_fetch = trace.fetch_lat[: len(fetch)]
+    k = len(fetch) // window
+    sim_cpi = fetch[: k * window].reshape(k, window).sum(1) / window
+    des_cpi = des_fetch[: k * window].reshape(k, window).sum(1) / window
+    return sim_cpi, des_cpi

@@ -1,0 +1,217 @@
+"""Instruction-centric SimNet simulator in JAX (paper §3).
+
+State per lane: a recency-ordered in-flight buffer (slot 0 = newest) that
+plays both paper queues — entries carry an ``in_mw`` flag that flips when a
+retired store moves to the memory-write queue. One `lax.scan` step =
+one instruction: assemble model input from the buffer, predict (or teacher-
+force) the three latencies, advance the clock, retire in order, push.
+
+Lanes are the paper's sub-traces: `vmap` over lanes batches the predictor
+inference exactly like the paper's GPU batching; under `pjit` the lane axis
+shards over ("pod","data") with zero steady-state communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    ctx_len: int = 64  # in-flight buffer capacity = max context instructions
+    retire_width: int = 8
+    n_classes: int = 10  # hybrid head classes per latency type
+    max_latency: float = 100000.0
+    state_dtype: str = "float32"  # "bfloat16" halves the queue-state HBM
+    # traffic — the dominant roofline term of the parallel simulator (§Perf).
+    # Static features/latency-scaled values are all bf16-exact or tolerant.
+
+
+class SimState(NamedTuple):
+    feat: jax.Array  # (L, Q, 41) static blocks of in-flight instrs
+    addr: jax.Array  # (L, Q, 5) int32 comparison keys
+    resid: jax.Array  # (L, Q) f32 cycles since entry
+    exec_lat: jax.Array  # (L, Q) f32 predicted execution latency
+    store_lat: jax.Array  # (L, Q) f32 predicted store latency
+    valid: jax.Array  # (L, Q) bool
+    in_mw: jax.Array  # (L, Q) bool — retired store awaiting memory write
+    cur_tick: jax.Array  # (L,) f32
+    overflow: jax.Array  # (L,) i32 force-dropped entries (diagnostic)
+
+
+def init_state(n_lanes: int, cfg: SimConfig) -> SimState:
+    L, Q = n_lanes, cfg.ctx_len
+    sd = jnp.dtype(cfg.state_dtype)
+    return SimState(
+        feat=jnp.zeros((L, Q, F.STATIC_END), sd),
+        addr=jnp.zeros((L, Q, F.N_ADDR_KEYS), jnp.int32),
+        resid=jnp.zeros((L, Q), jnp.float32),  # cycle counters stay exact
+        exec_lat=jnp.zeros((L, Q), jnp.float32),
+        store_lat=jnp.zeros((L, Q), jnp.float32),
+        valid=jnp.zeros((L, Q), bool),
+        in_mw=jnp.zeros((L, Q), bool),
+        cur_tick=jnp.zeros((L,), jnp.float32),
+        overflow=jnp.zeros((L,), jnp.int32),
+    )
+
+
+def build_model_input(state: SimState, cur_feat, cur_addr):
+    """Assemble (L, 1+Q, 50): current instruction + context, recency order."""
+    L, Q, _ = state.feat.shape
+    sd = state.feat.dtype
+    dep = jnp.logical_and(
+        state.addr == cur_addr[:, None, :], cur_addr[:, None, :] != 0
+    )  # (L, Q, 5)
+    valid_f = state.valid.astype(sd)
+    ctx = jnp.concatenate(
+        [
+            state.feat,
+            (state.resid * F.LAT_SCALE)[..., None].astype(sd),
+            (state.exec_lat * F.LAT_SCALE)[..., None].astype(sd),
+            (state.store_lat * F.LAT_SCALE)[..., None].astype(sd),
+            dep.astype(sd),
+            valid_f[..., None],
+        ],
+        axis=-1,
+    )  # (L, Q, 50)
+    ctx = ctx * valid_f[..., None]  # zero out padding rows entirely
+    cur = jnp.concatenate(
+        [
+            cur_feat.astype(sd),
+            jnp.zeros((L, 3 + 5), sd),
+            jnp.ones((L, 1), sd),
+        ],
+        axis=-1,
+    )  # (L, 50)
+    return jnp.concatenate([cur[:, None, :], ctx], axis=1)  # (L, 1+Q, 50)
+
+
+def _suffix_any(x):
+    """suffix_any[q] = any(x[q+1:]) along the last axis."""
+    rev_cs = jnp.cumsum(x[..., ::-1].astype(jnp.int32), axis=-1)[..., ::-1]
+    after = rev_cs - x.astype(jnp.int32)
+    return after > 0
+
+
+def _suffix_count(x):
+    """suffix_count[q] = sum(x[q+1:])."""
+    rev_cs = jnp.cumsum(x[..., ::-1].astype(jnp.int32), axis=-1)[..., ::-1]
+    return rev_cs - x.astype(jnp.int32)
+
+
+def sim_step(state: SimState, cur, lats, cfg: SimConfig) -> SimState:
+    """Advance one instruction. cur: dict(feat (L,41), addr (L,5),
+    is_store (L,)); lats: (L, 3) predicted/true (fetch, exec, store)."""
+    fetch, exec_lat, store_lat = lats[:, 0], lats[:, 1], lats[:, 2]
+    fetch = jnp.clip(jnp.round(fetch), 0, cfg.max_latency)
+    exec_lat = jnp.clip(jnp.round(exec_lat), 1, cfg.max_latency)
+    store_lat = jnp.where(
+        cur["is_store"], jnp.clip(jnp.round(store_lat), 1, cfg.max_latency), 0.0
+    )
+
+    # clock + residence advance
+    cur_tick = state.cur_tick + fetch
+    resid = state.resid + jnp.where(state.valid, fetch[:, None], 0.0)
+
+    # --- processor-queue retirement: in-order, bandwidth-limited ---
+    budget = (cfg.retire_width * jnp.maximum(fetch, 1.0)).astype(jnp.int32)  # (L,)
+    proc = state.valid & ~state.in_mw
+    ready_p = proc & (resid >= state.exec_lat)
+    blocked = proc & ~ready_p
+    eligible = ready_p & ~_suffix_any(blocked)
+    retire_p = eligible & (_suffix_count(eligible) < budget[:, None])
+    # retired stores move to the memory-write queue; others leave
+    # (op one-hot position 7 == Op.STORE marks stores in the static block)
+    to_mw = retire_p & state.feat[:, :, 7].astype(bool)
+    in_mw = state.in_mw | to_mw
+    valid = state.valid & ~(retire_p & ~to_mw)
+
+    # --- memory-write queue retirement: in-order, unlimited ---
+    mw = valid & in_mw
+    ready_m = mw & (resid >= state.store_lat)
+    blocked_m = mw & ~ready_m
+    retire_m = ready_m & ~_suffix_any(blocked_m)
+    valid = valid & ~retire_m
+    in_mw = in_mw & valid
+
+    # --- push current instruction at slot 0 (roll the buffer) ---
+    overflow = state.overflow + valid[:, -1].astype(jnp.int32)
+
+    def push(buf, new):
+        return jnp.concatenate([new[:, None].astype(buf.dtype), buf[:, :-1]], axis=1)
+
+    return SimState(
+        feat=push(state.feat, cur["feat"]),
+        addr=push(state.addr, cur["addr"]),
+        resid=push(resid, jnp.zeros_like(fetch)),
+        exec_lat=push(state.exec_lat, exec_lat),
+        store_lat=push(state.store_lat, store_lat),
+        valid=push(valid, jnp.ones_like(fetch, dtype=bool)),
+        in_mw=push(in_mw, jnp.zeros_like(fetch, dtype=bool)),
+        cur_tick=cur_tick,
+        overflow=overflow,
+    )
+
+
+def drain_cycles(state: SimState) -> jax.Array:
+    """Δ of Eq. 1: cycles until the last in-flight instruction exits."""
+    need = jnp.maximum(state.exec_lat, state.store_lat) - state.resid
+    need = jnp.where(state.valid, need, 0.0)
+    return jnp.max(jnp.maximum(need, 0.0), axis=-1)
+
+
+def make_sim_scan(predict_fn: Optional[Callable], cfg: SimConfig):
+    """Returns scan_fn(state, trace_chunk) -> (state, per-step outputs).
+
+    trace_chunk: dict of (T, L, ...) arrays (feat, addr, is_store, labels).
+    predict_fn: (L, 1+Q, 50) -> (L, 3) latencies. None = teacher forcing
+    (dataset-builder mode: emits the assembled model inputs instead).
+    """
+
+    def step(state, xs):
+        cur = {"feat": xs["feat"], "addr": xs["addr"], "is_store": xs["is_store"]}
+        x = build_model_input(state, cur["feat"], cur["addr"])
+        if predict_fn is None:
+            lats = xs["labels"]
+            out = {"x": x}
+        else:
+            lats = predict_fn(x)  # sim_step zeroes store latency for non-stores
+            out = {"lats": lats}
+        new_state = sim_step(state, cur, lats, cfg)
+        return new_state, out
+
+    return step
+
+
+def simulate_trace(trace_arrays: dict, predict_fn, cfg: SimConfig, n_lanes: int):
+    """Parallel simulation (paper §3.3): partition into equal sub-traces
+    (lanes), simulate independently, total = Σ per-lane (ΣF + Δ).
+
+    trace_arrays: dict of (T, ...) numpy arrays. Returns dict of results.
+    """
+    T = trace_arrays["feat"].shape[0]
+    per = T // n_lanes
+    T_used = per * n_lanes
+
+    def lanes_first(a):
+        return np.swapaxes(a[:T_used].reshape(n_lanes, per, *a.shape[1:]), 0, 1)
+
+    xs = {k: jnp.asarray(lanes_first(v)) for k, v in trace_arrays.items()}
+    state = init_state(n_lanes, cfg)
+    step = make_sim_scan(predict_fn, cfg)
+    state, outs = jax.lax.scan(step, state, xs)
+    total = state.cur_tick + drain_cycles(state)
+    return {
+        "lane_cycles": total,
+        "total_cycles": jnp.sum(total),
+        "overflow": jnp.sum(state.overflow),
+        "outs": outs,
+        "n_instructions": T_used,
+    }

@@ -1,0 +1,248 @@
+"""Reference out-of-order CPU timing model — the repo's "gem5".
+
+Event-driven per-instruction model of a superscalar OoO core: fetch
+bandwidth + icache/ITLB, branch prediction with redirect-on-mispredict,
+ROB/IQ/LQ/SQ occupancy stalls, register scoreboard, global issue width,
+per-class execution latencies, dcache/DTLB for memory ops, store-to-load
+forwarding, memory barriers, in-order bandwidth-limited retirement, and
+post-retire store writeback.
+
+This plays both of gem5's roles in the paper: ML training-label generator
+and the accuracy baseline the learned simulator is validated against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+from repro.des.branch import make_predictor
+from repro.des.cache import CacheHierarchy
+from repro.des.isa import EXEC_LATENCY, Op
+from repro.des.trace import Trace
+from repro.des.workloads import Program
+
+
+@dataclasses.dataclass
+class O3Config:
+    name: str = "default_o3"
+    fetch_width: int = 3
+    issue_width: int = 8
+    retire_width: int = 8
+    rob: int = 40
+    iq: int = 32
+    lq: int = 16
+    sq: int = 16
+    dispatch_latency: int = 2
+    redirect_penalty: int = 3
+    forward_latency: int = 2
+    store_write_latency: int = 2
+    bpred: str = "bimodal"
+    caches: Optional[dict] = None
+
+    @property
+    def max_context(self) -> int:
+        """Max in-flight instructions ≈ frontend + ROB + SQ."""
+        return self.rob + self.sq + self.fetch_width * self.dispatch_latency
+
+
+A64FX_CONFIG = O3Config(
+    name="a64fx",
+    fetch_width=8,
+    issue_width=4,
+    retire_width=4,
+    rob=128,
+    iq=48,
+    lq=40,
+    sq=24,
+    bpred="bimode",
+    caches=dict(
+        l1i_size=64 * 1024, l1i_assoc=4,
+        l1d_size=64 * 1024, l1d_assoc=4, l1d_lat=8,
+        l2_size=8 * 1024 * 1024, l2_assoc=16, l2_lat=111,
+    ),
+)
+
+
+class O3Simulator:
+    def __init__(self, cfg: O3Config = O3Config()):
+        self.cfg = cfg
+        self.hier = CacheHierarchy(cfg.caches)
+        self.bpred = make_predictor(cfg.bpred)
+
+    def run(self, prog: Program, progress: bool = False) -> Trace:
+        cfg = self.cfg
+        T = prog.n
+        hier = self.hier
+        hier.reset()
+        self.bpred.reset()
+
+        fetch_c = np.zeros(T, np.int64)
+        complete_c = np.zeros(T, np.int64)
+        retire_c = np.zeros(T, np.int64)
+        store_done_c = np.zeros(T, np.int64)
+
+        mispred = np.zeros(T, bool)
+        fetch_level = np.zeros(T, np.int8)
+        fetch_tw = np.zeros((T, 3), np.int8)
+        fetch_wb = np.zeros((T, 2), np.int8)
+        data_level = np.zeros(T, np.int8)
+        data_tw = np.zeros((T, 3), np.int8)
+        data_wb = np.zeros((T, 3), np.int8)
+
+        reg_ready = defaultdict(int)  # register -> cycle value ready
+        fetch_count = defaultdict(int)  # cycle -> fetched this cycle
+        issue_count = defaultdict(int)
+        retire_count = defaultdict(int)
+
+        line = hier.cfg["line"]
+        prev_line = -1
+        line_ready = 0
+        redirect_at = 0  # earliest fetch cycle due to branch redirect
+        last_barrier_done = 0
+        mem_completes_since_barrier = [0]
+        # store-to-load forwarding: addr -> (index, data_ready_cycle)
+        store_data_ready = {}
+        loads_idx = []  # indices of loads (LQ occupancy)
+        stores_idx = []  # indices of stores (SQ occupancy)
+
+        prev_fetch = 0
+        for i in range(T):
+            op = int(prog.op[i])
+            pc = int(prog.pc[i])
+
+            # ---------------- fetch ----------------
+            f = max(prev_fetch, redirect_at)
+            # icache / ITLB when crossing a line
+            cur_line = pc // line
+            if cur_line != prev_line:
+                lvl, tw, wb = hier.fetch_access(pc)
+                fetch_level[i] = lvl
+                fetch_tw[i] = tw
+                fetch_wb[i] = wb
+                lat = hier.level_latency(lvl, data=False)
+                extra_tw = int((tw == 2).sum()) * hier.cfg["mem_lat"] // 4
+                line_ready = f + lat + extra_tw
+                prev_line = cur_line
+            else:
+                fetch_level[i] = 1
+            f = max(f, line_ready)
+            # structural stalls: ROB / IQ / LQ / SQ
+            if i >= cfg.rob:
+                f = max(f, retire_c[i - cfg.rob])
+            if i >= cfg.iq:
+                f = max(f, complete_c[i - cfg.iq])  # IQ slot frees at issue≈complete
+            if op == Op.LOAD and len(loads_idx) >= cfg.lq:
+                f = max(f, retire_c[loads_idx[-cfg.lq]])
+            if op == Op.STORE and len(stores_idx) >= cfg.sq:
+                f = max(f, store_done_c[stores_idx[-cfg.sq]])
+            # fetch bandwidth
+            while fetch_count[f] >= cfg.fetch_width:
+                f += 1
+            fetch_count[f] += 1
+            fetch_c[i] = f
+            prev_fetch = f
+
+            # ---------------- issue ----------------
+            ready = f + cfg.dispatch_latency
+            for r in prog.src[i]:
+                if r >= 0:
+                    ready = max(ready, reg_ready[int(r)])
+            if op in (Op.LOAD, Op.STORE):
+                ready = max(ready, last_barrier_done)
+            if op == Op.BARRIER:
+                ready = max(ready, max(mem_completes_since_barrier))
+            while issue_count[ready] >= cfg.issue_width:
+                ready += 1
+            issue_count[ready] += 1
+            issue = ready
+
+            # ---------------- execute ----------------
+            lat = EXEC_LATENCY[Op(op)]
+            if op == Op.LOAD:
+                addr = int(prog.addr[i])
+                lvl, tw, wb = hier.data_access(addr, write=False)
+                data_level[i] = lvl
+                data_tw[i] = tw
+                data_wb[i] = wb
+                fwd = store_data_ready.get(addr // 8)
+                if fwd is not None and fwd[1] > issue:
+                    lat += cfg.forward_latency
+                else:
+                    lat += hier.level_latency(lvl, data=True)
+                    lat += int((tw == 2).sum()) * hier.cfg["mem_lat"] // 4
+            elif op == Op.STORE:
+                addr = int(prog.addr[i])
+                lvl, tw, wb = hier.data_access(addr, write=True)
+                data_level[i] = lvl
+                data_tw[i] = tw
+                data_wb[i] = wb
+                store_data_ready[addr // 8] = (i, issue + 1)
+            complete = issue + lat
+            complete_c[i] = complete
+            for r in prog.dst[i]:
+                if r >= 0:
+                    reg_ready[int(r)] = complete
+            if op in (Op.LOAD, Op.STORE):
+                mem_completes_since_barrier.append(complete)
+            if op == Op.BARRIER:
+                last_barrier_done = complete
+                mem_completes_since_barrier = [0]
+
+            # ---------------- branch resolution ----------------
+            if op in (Op.BRANCH, Op.JUMP_IND):
+                taken = bool(prog.taken[i])
+                if op == Op.JUMP_IND:
+                    pred = self.bpred.predict(pc)  # BTB-less indirect: harder
+                    wrong = (pred != taken) or (taken and (pc % 16 == 0))
+                else:
+                    pred = self.bpred.predict(pc)
+                    wrong = pred != taken
+                self.bpred.update(pc, taken)
+                if wrong:
+                    mispred[i] = True
+                    redirect_at = complete + cfg.redirect_penalty
+
+            # ---------------- retire (in-order, bw-limited) ----------------
+            r = max(complete, retire_c[i - 1] if i else 0)
+            while retire_count[r] >= cfg.retire_width:
+                r += 1
+            retire_count[r] += 1
+            retire_c[i] = r
+
+            if op == Op.STORE:
+                sd = r + cfg.store_write_latency
+                if stores_idx:
+                    sd = max(sd, store_done_c[stores_idx[-1]])  # SQ drains in order
+                store_done_c[i] = sd
+                stores_idx.append(i)
+            if op == Op.LOAD:
+                loads_idx.append(i)
+
+            # periodic cleanup of the bandwidth dicts
+            if i % 4096 == 4095:
+                horizon = fetch_c[i] - 64
+                for d in (fetch_count, issue_count, retire_count):
+                    for k in [k for k in d if k < horizon]:
+                        del d[k]
+                if len(store_data_ready) > 65536:
+                    store_data_ready.clear()
+                if len(mem_completes_since_barrier) > 65536:
+                    mem_completes_since_barrier = [max(mem_completes_since_barrier)]
+
+        fetch_lat = np.diff(fetch_c, prepend=fetch_c[0])
+        exec_lat = complete_c - fetch_c
+        store_lat = np.where(prog.op == Op.STORE, store_done_c - fetch_c, 0)
+
+        return Trace(
+            name=prog.name,
+            pc=prog.pc, op=prog.op, src=prog.src, dst=prog.dst, addr=prog.addr,
+            mispred=mispred,
+            fetch_level=fetch_level, fetch_tw=fetch_tw, fetch_wb=fetch_wb,
+            data_level=data_level, data_tw=data_tw, data_wb=data_wb,
+            fetch_lat=fetch_lat.astype(np.int64),
+            exec_lat=exec_lat.astype(np.int64),
+            store_lat=store_lat.astype(np.int64),
+        )

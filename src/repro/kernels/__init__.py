@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes:
+#   conv2s      — SimNet CNN building block (k2s2 conv + bias + ReLU)
+#   cnn_trunk   — whole C3 trunk fused, VMEM-resident (beyond-paper)
+#   decode_attn — flash-decode GQA for the serving cells (beyond-paper)
+# ops.py holds the jit'd padded wrappers; ref.py the pure-jnp oracles.
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: the ENTIRE SimNet C3 trunk fused in one kernel.
+
+Beyond-paper optimization (DESIGN.md §6): at inference the C3 model is a
+chain of tiny GEMMs — on GPU (the paper's TensorRT path) each layer pays a
+kernel launch and an HBM round-trip, which dominates for small models.
+Here a lane-tile's activations stay VMEM-resident through all three conv
+layers: HBM traffic is exactly one input read + one output write per tile.
+
+All intermediate buffers live in kernel registers/VMEM; weights are tiny
+(≤ 128 KiB total) and replicated into VMEM once per tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trunk_kernel(x_ref, w1, b1, w2, b2, w3, b3, o_ref):
+    h = x_ref[...]  # (TB, N, C)
+
+    def layer(h, w_ref, b_ref):
+        TB, N, C = h.shape
+        hr = h.reshape(TB * (N // 2), 2 * C)
+        y = jnp.dot(hr, w_ref[...], preferred_element_type=jnp.float32)
+        y = jax.nn.relu(y + b_ref[...][None, :])
+        return y.reshape(TB, N // 2, -1)
+
+    h = layer(h, w1, b1)
+    h = layer(h, w2, b2)
+    h = layer(h, w3, b3)
+    o_ref[...] = h
+
+
+def cnn_trunk_pallas(x, weights, *, lane_tile: int = 64, interpret: bool = True):
+    """x: (B, N, C); weights: [(w1,b1),(w2,b2),(w3,b3)] with wi: (2Ci, Ci+1).
+
+    Returns (B, N//8, C3). N must be divisible by 8; B by lane_tile
+    (ops.py pads both).
+    """
+    B, N, C = x.shape
+    assert len(weights) == 3, "cnn_trunk fuses exactly the C3 depth"
+    chans = [C] + [w.shape[1] for w, _ in weights]
+    TB = min(lane_tile, B)
+    assert B % TB == 0 and N % 8 == 0, (B, N)
+    grid = (B // TB,)
+    flat = []
+    in_specs = [pl.BlockSpec((TB, N, C), lambda i: (i, 0, 0))]
+    for li, (w, b) in enumerate(weights):
+        flat += [w, b]
+        in_specs += [
+            pl.BlockSpec(w.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ]
+    return pl.pallas_call(
+        _trunk_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((TB, N // 8, chans[-1]), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N // 8, chans[-1]), jnp.float32),
+        interpret=interpret,
+    )(x, *flat)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused conv1d(kernel=2, stride=2) + bias + ReLU.
+
+The non-overlapping k2s2 convolution of the SimNet CNN is exactly a blocked
+GEMM on a (N/2, 2C) reshape — MXU-friendly once channels are padded to a
+lane multiple (ops.py pads 50 → 64/128). One grid step processes a tile of
+TB lanes; x-tile + weights are VMEM-resident, the matmul runs at MXU
+precision fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2s_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]  # (TB, N, C)
+    TB, N, C = x.shape
+    xr = x.reshape(TB * (N // 2), 2 * C)
+    y = jnp.dot(xr, w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...][None, :]
+    o_ref[...] = jax.nn.relu(y).reshape(TB, N // 2, -1)
+
+
+def conv2s_pallas(x, w, b, *, lane_tile: int = 64, interpret: bool = True):
+    """x: (B, N, C) f32; w: (2C, Co); b: (Co,) -> (B, N//2, Co).
+
+    B must be a multiple of lane_tile (ops.py pads); interpret=True runs the
+    kernel body on CPU for validation (TPU is the deployment target).
+    """
+    B, N, C = x.shape
+    Co = w.shape[1]
+    TB = min(lane_tile, B)
+    assert B % TB == 0, (B, TB)
+    grid = (B // TB,)
+    return pl.pallas_call(
+        _conv2s_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TB, N, C), lambda i: (i, 0, 0)),
+            pl.BlockSpec((2 * C, Co), lambda i: (0, 0)),
+            pl.BlockSpec((Co,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TB, N // 2, Co), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N // 2, Co), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash-decode GQA attention (one query token vs a long
+KV cache) with online softmax over sequence blocks.
+
+The serving hot-spot for decode_32k / long_500k cells: decode attention is
+purely memory-bound (AI ≈ 1 flop/byte), so the win is reading K/V exactly
+once at full HBM bandwidth with no (B, H, S) logits materialisation. Grid =
+(batch, S blocks); the S dimension iterates sequentially per batch row with
+running (max, sum, acc) scratch in VMEM — the flash-decoding scheme adapted
+to TPU's sequential-grid model (no atomics / split-k reduction, unlike the
+CUDA formulation; see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, block_s, window):
+    s_idx = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (KV, G, hd)
+    k = k_ref[0]  # (BS, KV, hd)
+    v = v_ref[0]
+    KV, G, hd = q.shape
+    cache_len = len_ref[0]
+
+    logits = jnp.einsum("kgh,skh->kgs", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    pos = s_idx * block_s + jax.lax.iota(jnp.int32, logits.shape[-1])
+    valid = pos[None, None, :] < cache_len
+    if window > 0:
+        valid = jnp.logical_and(valid, pos[None, None, :] >= cache_len - window)
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]  # (KV, G)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("kgs,skh->kgh", p.astype(jnp.float32), v.astype(jnp.float32))
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def decode_attn_pallas(q, k, v, cache_len, *, block_s: int = 512, window: int = 0, interpret: bool = True):
+    """q: (B, H, hd); k, v: (B, S, KV, hd); cache_len: scalar int32.
+
+    Returns (B, H, hd) fp32. block_s must divide S (ops.py pads; padded
+    entries are masked by cache_len).
+    """
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    grid = (B, S // bs)
+    qg = q.reshape(B, KV, G, hd)
+    len_arr = jnp.full((1,), cache_len, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, block_s=bs, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, s: (0,)),
+            pl.BlockSpec((1, KV, G, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd), lambda b, s: (b, s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd), lambda b, s: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),  # running max
+            pltpu.VMEM((KV, G), jnp.float32),  # running sum
+            pltpu.VMEM((KV, G, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(len_arr, qg, k, v)
+    return out.reshape(B, H, hd)

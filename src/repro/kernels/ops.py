@@ -1,0 +1,85 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles padding to hardware-friendly shapes (lanes to the tile multiple,
+channels to 64/128 for the MXU, KV length to the sequence block) and
+delegates to the kernels; `interpret=True` on CPU (the TPU target compiles
+the same kernels natively — the flag is resolved from the backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cnn_trunk import cnn_trunk_pallas
+from repro.kernels.conv2s import conv2s_pallas
+from repro.kernels.decode_attn import decode_attn_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x, axis, multiple):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def _pad_channels(w, b, c_in_pad):
+    """Pad a (2C, Co) conv weight's input side for channel-padded x."""
+    C2 = w.shape[0]
+    if 2 * c_in_pad == C2:
+        return w, b
+    C = C2 // 2
+    wr = w.reshape(2, C, -1)
+    wr = jnp.pad(wr, ((0, 0), (0, c_in_pad - C), (0, 0)))
+    return wr.reshape(2 * c_in_pad, -1), b
+
+
+@functools.partial(jax.jit, static_argnames=("lane_tile",))
+def conv2s(params, x, *, lane_tile: int = 64):
+    """Fused k2s2 conv + bias + ReLU. x: (B, N, C) -> (B, N//2, Co)."""
+    B0 = x.shape[0]
+    x, _ = _pad_axis(x.astype(jnp.float32), 0, lane_tile)
+    x, c0 = _pad_axis(x, 2, 64)  # MXU lane alignment
+    w, b = _pad_channels(params["w"].astype(jnp.float32), params["b"].astype(jnp.float32), x.shape[2])
+    out = conv2s_pallas(x, w, b, lane_tile=lane_tile, interpret=_interpret())
+    return out[:B0]
+
+
+@functools.partial(jax.jit, static_argnames=("lane_tile",))
+def cnn_trunk(layer_params: Sequence[dict], x, *, lane_tile: int = 64):
+    """Whole fused C3 trunk. x: (B, N, C) -> (B, N//8, C3)."""
+    B0 = x.shape[0]
+    x, _ = _pad_axis(x.astype(jnp.float32), 0, lane_tile)
+    x, _ = _pad_axis(x, 2, 64)
+    weights = []
+    c_in = x.shape[2]
+    for lp in layer_params:
+        w, b = _pad_channels(lp["w"].astype(jnp.float32), lp["b"].astype(jnp.float32), c_in)
+        weights.append((w, b))
+        c_in = w.shape[1]
+    out = cnn_trunk_pallas(x, weights, lane_tile=lane_tile, interpret=_interpret())
+    return out[:B0]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s"))
+def decode_attn(q, k, v, cache_len, *, window: int = 0, block_s: int = 512):
+    """Flash-decode GQA. q: (B,H,hd); k,v: (B,S,KV,hd) -> (B,H,hd)."""
+    S0 = k.shape[1]
+    bs = min(block_s, S0)
+    k, _ = _pad_axis(k, 1, bs)
+    v, _ = _pad_axis(v, 1, bs)
+    # padded tail is masked out by cache_len inside the kernel
+    return decode_attn_pallas(
+        q, k, v, jnp.minimum(cache_len, S0), block_s=bs, window=window,
+        interpret=_interpret(),
+    ).astype(q.dtype)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2s_ref(x, w, b):
+    """Non-overlapping conv1d kernel=2 stride=2 + bias + ReLU.
+
+    x: (B, N, C); w: (2C, Co); b: (Co,). -> (B, N//2, Co)
+    """
+    B, N, C = x.shape
+    xr = x.reshape(B, N // 2, 2 * C)
+    return jax.nn.relu(jnp.einsum("bnc,co->bno", xr, w) + b)
+
+
+def cnn_trunk_ref(layers, x):
+    """Chain of conv2s layers. layers: [(w, b), ...]."""
+    h = x
+    for w, b in layers:
+        h = conv2s_ref(h, w, b)
+    return h
+
+
+def decode_attn_ref(q, k, v, cache_len, *, window: int = 0):
+    """Single-token GQA decode attention (fp32 softmax).
+
+    q: (B, H, hd); k, v: (B, S, KV, hd); cache_len: scalar int32.
+    window > 0 masks to the trailing window (linear cache layout).
+    """
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    lo = jnp.where(window > 0, cache_len - window, 0)
+    valid = (pos[None, None, None, :] < cache_len) & (pos[None, None, None, :] >= lo)
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
+    return ctx.reshape(B, H, hd)

@@ -1,0 +1,114 @@
+"""ShapeDtypeStruct input stand-ins + logical sharding for every step kind.
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable, zero device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import hybrid, lm, rwkv, whisper
+from repro.nn.init import ShardSpec
+
+N_PATCHES = 256  # vision stub: image patches occupying the sequence head
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStructs, logical axes) for the forward/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": sds((B, S), jnp.int32)}
+    axes = {"tokens": ShardSpec(("batch", None))}
+    if shape.kind == "train":
+        specs["loss_mask"] = sds((B, S), jnp.float32)
+        axes["loss_mask"] = ShardSpec(("batch", None))
+    if cfg.family == "encdec":
+        specs["frames"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        axes["frames"] = ShardSpec(("batch", None, None))
+    if cfg.frontend == "vision_stub":
+        specs["patches"] = sds((B, N_PATCHES, cfg.frontend_dim), jnp.bfloat16)
+        axes["patches"] = ShardSpec(("batch", None, None))
+        specs["mrope_positions"] = sds((3, B, S), jnp.int32)
+        axes["mrope_positions"] = ShardSpec((None, "batch", None))
+    return specs, axes
+
+
+_STATE_INIT = {
+    "dense": lm.init_decode_state,
+    "moe": lm.init_decode_state,
+    "vlm": lm.init_decode_state,
+    "rwkv": rwkv.init_decode_state,
+    "hybrid": hybrid.init_decode_state,
+    "encdec": whisper.init_decode_state,
+}
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the decode state via eval_shape (no alloc)."""
+    init = _STATE_INIT[cfg.family]
+    return jax.eval_shape(lambda: init(cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_state_axes(cfg: ModelConfig, state_shapes):
+    """Logical axes tree matching the decode state structure."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {
+            "k": ShardSpec(("layers", "batch", "kvseq", None, None)),
+            "v": ShardSpec(("layers", "batch", "kvseq", None, None)),
+            "pos": ShardSpec(()),
+        }
+    if cfg.family == "rwkv":
+        return {
+            "wkv": ShardSpec(("layers", "batch", "heads", None, None)),
+            "x_tm": ShardSpec(("layers", "batch", None)),
+            "x_cm": ShardSpec(("layers", "batch", None)),
+            "pos": ShardSpec(()),
+        }
+    if cfg.family == "encdec":
+        return {
+            "k": ShardSpec(("layers", "batch", "kvseq", None, None)),
+            "v": ShardSpec(("layers", "batch", "kvseq", None, None)),
+            "ck": ShardSpec(("layers", "batch", None, None, None)),
+            "cv": ShardSpec(("layers", "batch", None, None, None)),
+            "pos": ShardSpec(()),
+        }
+    if cfg.family == "hybrid":
+        axes = {"pos": ShardSpec(())}
+        for i in range(cfg.n_layers):
+            if cfg.is_attn_layer(i):
+                axes[f"layer_{i}"] = {
+                    "k": ShardSpec(("batch", "kvseq", None, None)),
+                    "v": ShardSpec(("batch", "kvseq", None, None)),
+                }
+            else:
+                axes[f"layer_{i}"] = {
+                    "h": ShardSpec(("batch", None)),
+                    "conv": ShardSpec(("batch", None, None)),
+                }
+        return axes
+    raise ValueError(cfg.family)
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return sds((shape.global_batch,), jnp.int32), ShardSpec(("batch",))
+
+
+def param_shapes_and_specs(model, key=None):
+    """Trace init without allocation; capture the spec tree via closure."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    box = {}
+
+    def init_params_only(k):
+        p, s = model.init(k)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(init_params_only, key)
+    return shapes, box["specs"]

@@ -1,0 +1,141 @@
+"""Fault-tolerant training driver.
+
+Ties together: arch config → model → mesh (elastic choice) → sharded
+train step (pjit) → data pipeline → checkpoint/restart → straggler monitor.
+
+CPU-friendly: ``--reduced`` runs the same code path with the arch's reduced
+config on a small host mesh (this is what examples/train_lm.py wraps).
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_config, get_reduced_config
+from repro.data.pipeline import TokenLoader
+from repro.launch import specs as specs_lib
+from repro.models.registry import build_model
+from repro.runtime import elastic
+from repro.runtime import sharding as sh
+from repro.runtime.straggler import StragglerMonitor
+from repro.training.optimizer import AdamConfig, adam_init, adam_state_specs
+from repro.training.train_loop import make_train_step
+
+
+def extras_for(cfg, n_patches=8):
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = lambda b, s: np.random.default_rng(0).standard_normal(
+            (b, cfg.enc_seq, cfg.d_model), dtype=np.float32
+        )
+    if cfg.frontend == "vision_stub":
+        extras["patches"] = lambda b, s: np.random.default_rng(0).standard_normal(
+            (b, n_patches, cfg.frontend_dim), dtype=np.float32
+        )
+        def mrope(b, s):
+            pos = np.broadcast_to(np.arange(s, dtype=np.int32)[None], (b, s))
+            return np.broadcast_to(pos[None], (3, b, s)).copy()
+        extras["mrope_positions"] = mrope
+    return extras
+
+
+def train(
+    arch: str,
+    *,
+    reduced: bool = True,
+    steps: int = 50,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    ckpt_dir=None,
+    ckpt_every: int = 25,
+    model_axis: int = 1,
+    accum_steps=None,
+    log_every: int = 10,
+):
+    cfg = get_reduced_config(arch) if reduced else get_config(arch)
+    if accum_steps is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, accum_steps=accum_steps)
+    model = build_model(cfg)
+
+    plan = elastic.choose_mesh(len(jax.devices()), model_axis=model_axis, pod_size=1 << 30)
+    mesh = elastic.build(plan)
+    rules = sh.rules_for(cfg, "train")
+    constrain = sh.make_constrain(mesh, rules)
+
+    params, pspecs = model.init(jax.random.PRNGKey(0))
+    p_sh = sh.spec_tree_to_shardings(pspecs, rules, mesh)
+    params = jax.device_put(params, p_sh)
+    opt = adam_init(params)
+    opt_sh = sh.spec_tree_to_shardings(adam_state_specs(pspecs), rules, mesh)
+    opt = jax.device_put(opt, opt_sh)
+
+    acfg = AdamConfig(lr=lr, warmup_steps=max(steps // 10, 1), decay_steps=steps)
+    step_fn = make_train_step(model, acfg, constrain=constrain, accum_steps=cfg.accum_steps)
+    jitted = jax.jit(step_fn, in_shardings=(p_sh, opt_sh, None), out_shardings=(p_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+
+    mgr = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
+    start_step = 0
+    if mgr and mgr.latest_step() is not None:
+        state, start_step = mgr.restore(shardings={"params": p_sh, "opt": opt_sh})
+        params, opt = state["params"], state["opt"]
+        print(f"[train] restored step {start_step} from {ckpt_dir}")
+
+    loader = TokenLoader(cfg.vocab, batch, seq, extras=extras_for(cfg))
+    monitor = StragglerMonitor()
+    losses = []
+    with mesh:
+        for step in range(start_step, steps):
+            b = next(loader)
+            t0 = time.time()
+            params, opt, metrics = jitted(params, opt, b)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            monitor.record(step, dt)
+            losses.append(float(metrics["loss"]))
+            if log_every and step % log_every == 0:
+                print(
+                    f"[train] step {step} loss {losses[-1]:.4f} "
+                    f"grad_norm {float(metrics['grad_norm']):.3f} {dt*1000:.0f}ms"
+                )
+            if mgr and (step + 1) % ckpt_every == 0:
+                mgr.save(step + 1, {"params": params, "opt": opt})
+    if mgr:
+        mgr.save(steps, {"params": params, "opt": opt})
+        mgr.wait()
+    loader.close()
+    return {"losses": losses, "final_loss": losses[-1], "monitor": monitor}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+    res = train(
+        args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir, model_axis=args.model_axis,
+    )
+    print(f"final loss: {res['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

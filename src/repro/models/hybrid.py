@@ -1,0 +1,202 @@
+"""RecurrentGemma (Griffin) hybrid: (R, R, A) pattern of RG-LRU recurrent
+blocks and local sliding-window attention, unrolled layers."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_lib
+from repro.nn import ssm
+from repro.nn.attention import KVCache
+from repro.nn.init import embed_init, split_keys
+from repro.nn.layers import embed as embed_lookup
+from repro.nn.layers import gated_mlp, gated_mlp_params
+from repro.nn.rope import apply_rope
+from repro.nn.transformer import _noop_constrain, norm_apply, norm_params
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_hybrid(key, cfg):
+    keys = split_keys(key, cfg.n_layers + 2)
+    p, s = {}, {}
+    p["embed"], s["embed"] = {}, {}
+    p["embed"]["w"], s["embed"]["w"] = embed_init(keys[0], cfg.vocab, cfg.d_model)
+    blocks, bspecs = {}, {}
+    for i in range(cfg.n_layers):
+        k_mix, k_mlp = split_keys(keys[1 + i], 2)
+        lp, ls = {}, {}
+        lp["ln1"], ls["ln1"] = norm_params(cfg, cfg.d_model)
+        if cfg.is_attn_layer(i):
+            lp["attn"], ls["attn"] = attn_lib.attention_params(
+                k_mix, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            )
+        else:
+            lp["rec"], ls["rec"] = ssm.recurrent_block_params(
+                k_mix, cfg.d_model, cfg.rnn_width, cfg.rnn_heads, cfg.conv_width
+            )
+        lp["ln2"], ls["ln2"] = norm_params(cfg, cfg.d_model)
+        lp["mlp"], ls["mlp"] = gated_mlp_params(k_mlp, cfg.d_model, cfg.d_ff)
+        blocks[f"layer_{i}"], bspecs[f"layer_{i}"] = lp, ls
+    p["blocks"], s["blocks"] = blocks, bspecs
+    p["final_norm"], s["final_norm"] = norm_params(cfg, cfg.d_model)
+    return p, s
+
+
+def _attn_seq(lp, x, positions, *, cfg, dtype, collect_kv=False):
+    T = x.shape[1]
+    q, k, v = attn_lib.project_qkv(
+        lp["attn"], x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim, dtype=dtype
+    )
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    t_ar = jnp.arange(T, dtype=jnp.int32)
+    mask = attn_lib.make_mask(t_ar, t_ar, jnp.asarray(cfg.local_window, jnp.int32))
+    ctx = attn_lib.mha(q, k, v, mask, dtype=dtype)
+    out = attn_lib.attn_out(lp["attn"], ctx, dtype=dtype)
+    return (out, (k, v)) if collect_kv else (out, None)
+
+
+def forward(params, cfg, batch, *, constrain=_noop_constrain, collect_kv=False):
+    dtype = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = embed_lookup(params["embed"], tokens, dtype=dtype)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    x = constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    kvs = {}
+
+    def layer(i, x):
+        lp = params["blocks"][f"layer_{i}"]
+        h = norm_apply(cfg, lp["ln1"], x, dtype)
+        if cfg.is_attn_layer(i):
+            y, kv = _attn_seq(lp, h, positions, cfg=cfg, dtype=dtype, collect_kv=collect_kv)
+            if collect_kv:
+                kvs[f"layer_{i}"] = kv
+        else:
+            y = ssm.recurrent_block(lp["rec"], h, n_heads=cfg.rnn_heads, dtype=dtype)
+        x = x + y
+        x = constrain(x, ("batch", "seq", None))
+        h = norm_apply(cfg, lp["ln2"], x, dtype)
+        x = x + gated_mlp(lp["mlp"], h, act=cfg.act, dtype=dtype)
+        return constrain(x, ("batch", "seq", None))
+
+    for i in range(cfg.n_layers):
+        f = (lambda xx, ii=i: layer(ii, xx))
+        x = jax.checkpoint(f)(x) if cfg.remat == "full" and not collect_kv else f(x)
+
+    x = norm_apply(cfg, params["final_norm"], x, dtype)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"]["w"].astype(dtype))
+    return constrain(logits, ("batch", None, "vocab")), ({"kv": kvs} if collect_kv else {})
+
+
+def init_decode_state(cfg, batch_size: int, seq_len: int):
+    dtype = _dtype(cfg)
+    S = min(seq_len, cfg.local_window) if cfg.local_window else seq_len
+    state = {"pos": jnp.zeros((), jnp.int32)}
+    for i in range(cfg.n_layers):
+        if cfg.is_attn_layer(i):
+            state[f"layer_{i}"] = {
+                "k": jnp.zeros((batch_size, S, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch_size, S, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+        else:
+            state[f"layer_{i}"] = {
+                "h": jnp.zeros((batch_size, cfg.rnn_width), jnp.float32),
+                "conv": jnp.zeros((batch_size, cfg.conv_width - 1, cfg.rnn_width), jnp.float32),
+            }
+    return state
+
+
+def decode_step(params, cfg, state, token, *, constrain=_noop_constrain, use_kernel=False):
+    dtype = _dtype(cfg)
+    B = token.shape[0]
+    pos = state["pos"]
+    x = embed_lookup(params["embed"], token[:, None], dtype=dtype)[:, 0]
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    new_state = {"pos": pos + 1}
+
+    for i in range(cfg.n_layers):
+        lp = params["blocks"][f"layer_{i}"]
+        ls = state[f"layer_{i}"]
+        h = norm_apply(cfg, lp["ln1"], x[:, None, :], dtype)[:, 0]
+        if cfg.is_attn_layer(i):
+            cache = KVCache(ls["k"], ls["v"])
+            S_cache = cache.k.shape[1]
+            q, k, v = attn_lib.project_qkv(
+                lp["attn"], h[:, None, :], n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, dtype=dtype,
+            )
+            pos_b = jnp.full((B, 1), pos, jnp.int32)
+            q = apply_rope(q, pos_b, cfg.rope_theta)
+            k = apply_rope(k, pos_b, cfg.rope_theta)
+            idx = jnp.mod(pos, S_cache)  # ring buffer (window-sized cache)
+            cache = attn_lib.cache_update(cache, k[:, 0], v[:, 0], idx)
+            cache_len = jnp.minimum(pos + 1, S_cache)
+            ctx = attn_lib.decode_attention(q[:, 0], cache, cache_len, dtype=dtype, use_kernel=use_kernel)
+            y = attn_lib.attn_out(lp["attn"], ctx[:, None], dtype=dtype)[:, 0]
+            new_state[f"layer_{i}"] = {"k": cache.k, "v": cache.v}
+        else:
+            rec_state = ssm.RecurrentState(ls["h"], ls["conv"])
+            y, rec_new = ssm.recurrent_block_step(lp["rec"], h, rec_state, n_heads=cfg.rnn_heads, dtype=dtype)
+            new_state[f"layer_{i}"] = {"h": rec_new.h, "conv": rec_new.conv}
+        x = x + y
+        h = norm_apply(cfg, lp["ln2"], x[:, None, :], dtype)[:, 0]
+        x = x + gated_mlp(lp["mlp"], h[:, None, :], act=cfg.act, dtype=dtype)[:, 0]
+
+    x = norm_apply(cfg, params["final_norm"], x[:, None, :], dtype)[:, 0]
+    logits = jnp.einsum("bd,vd->bv", x, params["embed"]["w"].astype(dtype))
+    return logits, new_state
+
+
+def prefill(params, cfg, batch, *, constrain=_noop_constrain):
+    """Prefill: forward + assemble decode state (KV from attn layers; the
+    recurrent state is recomputed via per-layer scans with state capture)."""
+    dtype = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = embed_lookup(params["embed"], tokens, dtype=dtype)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    x = constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    S = min(T, cfg.local_window) if cfg.local_window else T
+    state = {"pos": jnp.asarray(T, jnp.int32)}
+
+    for i in range(cfg.n_layers):
+        lp = params["blocks"][f"layer_{i}"]
+        h = norm_apply(cfg, lp["ln1"], x, dtype)
+        if cfg.is_attn_layer(i):
+            y, (k, v) = _attn_seq(lp, h, positions, cfg=cfg, dtype=dtype, collect_kv=True)
+            # keep the trailing window, laid out ring-consistently
+            k_tail, v_tail = k[:, -S:], v[:, -S:]
+            shift = jnp.mod(T, S)  # roll so entry t lands at t % S
+            k_tail = jnp.roll(k_tail, shift, axis=1)
+            v_tail = jnp.roll(v_tail, shift, axis=1)
+            state[f"layer_{i}"] = {"k": k_tail, "v": v_tail}
+        else:
+            xb = jnp.einsum("btd,dr->btr", h.astype(dtype), lp["rec"]["wx"].astype(dtype))
+            yb = jax.nn.gelu(jnp.einsum("btd,dr->btr", h.astype(dtype), lp["rec"]["wy"].astype(dtype)))
+            from repro.nn.layers import causal_conv1d
+
+            xb = causal_conv1d(lp["rec"]["conv"], xb, dtype=dtype)
+            hseq, h_last = ssm.rglru(lp["rec"]["rglru"], xb, n_heads=cfg.rnn_heads, dtype=dtype)
+            y = jnp.einsum("btr,rd->btd", hseq * yb, lp["rec"]["wo"].astype(dtype))
+            conv_tail = xb[:, -(cfg.conv_width - 1):, :]  # conv lookback carries pre-conv inputs
+            # NOTE: conv state must carry pre-conv branch inputs, not outputs
+            pre = jnp.einsum("btd,dr->btr", h.astype(dtype), lp["rec"]["wx"].astype(dtype))
+            conv_tail = pre[:, -(cfg.conv_width - 1):, :]
+            state[f"layer_{i}"] = {"h": h_last.astype(jnp.float32), "conv": conv_tail.astype(jnp.float32)}
+        x = x + y
+        x = constrain(x, ("batch", "seq", None))
+        hm = norm_apply(cfg, lp["ln2"], x, dtype)
+        x = x + gated_mlp(lp["mlp"], hm, act=cfg.act, dtype=dtype)
+        x = constrain(x, ("batch", "seq", None))
+
+    xn = norm_apply(cfg, params["final_norm"], x[:, -1:, :], dtype)  # last token only
+    logits = jnp.einsum("btd,vd->btv", xn, params["embed"]["w"].astype(dtype))
+    return logits, state

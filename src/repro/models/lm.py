@@ -1,0 +1,242 @@
+"""Decoder-only LM builder: dense, MoE, and VLM (stub frontend) families.
+
+Uniform-layer archs lower through scan-over-layers (stacked params — small
+HLO independent of depth); per-layer heterogeneity (gemma3 local/global) is
+expressed with traced per-layer scalars fed as scan xs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import transformer as tfm
+from repro.nn.attention import KVCache
+from repro.nn.init import ShardSpec, dense_init, embed_init, split_keys, stack_layer_specs
+from repro.nn.layers import embed as embed_lookup
+from repro.nn.moe import load_balancing_loss
+from repro.nn.transformer import _noop_constrain
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg):
+    keys = split_keys(key, cfg.n_layers + 3)
+    p, s = {}, {}
+    p["embed"], s["embed"] = {}, {}
+    p["embed"]["w"], s["embed"]["w"] = embed_init(keys[0], cfg.vocab, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["unembed"], s["unembed"] = {}, {}
+        p["unembed"]["w"], s["unembed"]["w"] = embed_init(keys[1], cfg.vocab, cfg.d_model)
+    if cfg.frontend == "vision_stub":
+        p["frontend"], s["frontend"] = {}, {}
+        p["frontend"]["w"], s["frontend"]["w"] = dense_init(
+            keys[2], cfg.frontend_dim, cfg.d_model, axes=(None, "embed")
+        )
+    layers, layer_specs = [], None
+    for i in range(cfg.n_layers):
+        lp, ls = tfm.block_params(keys[3 + i], cfg)
+        layers.append(lp)
+        layer_specs = ls
+    if cfg.scan_layers:
+        p["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *layers)
+        s["blocks"] = stack_layer_specs(layer_specs)
+    else:
+        p["blocks"] = {f"layer_{i}": lp for i, lp in enumerate(layers)}
+        s["blocks"] = {f"layer_{i}": layer_specs for i in range(cfg.n_layers)}
+    p["final_norm"], s["final_norm"] = tfm.norm_params(cfg, cfg.d_model)
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# embedding / head helpers
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens, patches=None, constrain=_noop_constrain):
+    dtype = _dtype(cfg)
+    x = embed_lookup(params["embed"], tokens, dtype=dtype)
+    if cfg.zero_centered_norm:  # gemma convention
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if patches is not None:
+        pe = jnp.einsum(
+            "bnd,de->bne", patches.astype(dtype), params["frontend"]["w"].astype(dtype)
+        )
+        # image patches occupy the leading positions of the sequence
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+    return constrain(x, ("batch", "seq", None))
+
+
+def lm_logits(params, cfg, x, constrain=_noop_constrain):
+    dtype = _dtype(cfg)
+    x = tfm.norm_apply(cfg, params["final_norm"], x, dtype)
+    table = params["embed"]["w"] if cfg.tie_embeddings else params["unembed"]["w"]
+    logits = jnp.einsum("...d,vd->...v", x.astype(dtype), table.astype(dtype))
+    if x.ndim == 3:
+        logits = constrain(logits, ("batch", None, "vocab"))
+    return logits
+
+
+def _positions(cfg, batch, B, S):
+    if cfg.mrope:
+        if "mrope_positions" in batch:
+            return batch["mrope_positions"]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+# ---------------------------------------------------------------------------
+# forward (sequence mode)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, batch, *, constrain=_noop_constrain, collect_kv=False, logits_mode="all",
+            layer_specs=None):
+    """batch: {"tokens": (B,S) int32, optional "patches", "mrope_positions"}.
+
+    Returns (logits, aux). aux: {"moe_loss": scalar, "kv": (L,B,S,KV,hd) x2}.
+    ``logits_mode="last"`` computes the unembed on the final position only
+    (prefill path — avoids materialising (B, S, V)).
+    ``layer_specs``: per-layer ShardSpec tree; when given (and constrain
+    supports .tree) each scanned layer's param slices are sharding-
+    constrained INSIDE the body, which keeps their backward cotangents —
+    the weight gradients — sharded through the scan (§Perf).
+    """
+    dtype = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens, batch.get("patches"), constrain)
+    positions = _positions(cfg, batch, B, S)
+    windows = tfm.layer_windows(cfg)
+    thetas = tfm.layer_thetas(cfg)
+    blocks = params["blocks"]
+    if cfg.pre_cast_params:
+        # cast once per step → FSDP all-gathers inside the scan move bf16
+        blocks = jax.tree_util.tree_map(
+            lambda p: p.astype(dtype) if p.dtype == jnp.float32 else p, blocks
+        )
+
+    def body(x, layer_inputs):
+        lp, window, theta = layer_inputs
+        if layer_specs is not None and hasattr(constrain, "tree"):
+            lp = constrain.tree(lp, layer_specs)
+        x, aux = tfm.block_seq(
+            lp, x, positions, cfg=cfg, window=window, theta=theta,
+            dtype=dtype, constrain=constrain, return_kv=collect_kv,
+        )
+        ys = {}
+        if collect_kv:
+            ys["kv"] = aux["kv"]
+        if cfg.family == "moe":
+            ys["moe_loss"] = load_balancing_loss(aux["router_logits"], n_experts=cfg.n_experts)
+        return x, ys
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(body, x, (blocks, windows, thetas))
+    else:
+        collected = []
+        for i in range(cfg.n_layers):
+            x, y = body(x, (blocks[f"layer_{i}"], windows[i], thetas[i]))
+            collected.append(y)
+        ys = jax.tree_util.tree_map(lambda *v: jnp.stack(v, 0), *collected) if collected and collected[0] else {}
+
+    aux = {}
+    if cfg.family == "moe":
+        aux["moe_loss"] = jnp.mean(ys["moe_loss"])
+    if collect_kv:
+        aux["kv"] = ys["kv"]
+    if logits_mode == "last":
+        x = x[:, -1:, :]
+        logits = lm_logits(params, cfg, x, _noop_constrain)
+    else:
+        logits = lm_logits(params, cfg, x, constrain)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (state = stacked KV caches)
+# ---------------------------------------------------------------------------
+
+def cache_size(cfg, seq_len: int) -> int:
+    """Per-layer KV allocation. Uniform-window archs get ring buffers."""
+    if cfg.attn_pattern == "swa" and cfg.local_window > 0:
+        return min(seq_len, cfg.local_window)
+    return seq_len
+
+
+def init_decode_state(cfg, batch_size: int, seq_len: int):
+    S = cache_size(cfg, seq_len)
+    dtype = _dtype(cfg)
+    shape = (cfg.n_layers, batch_size, S, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_logical_axes(cfg):
+    """Logical sharding for the decode state (see runtime.sharding)."""
+    kv_axes = ("layers", "batch", "kvseq", None, None)
+    return {"k": ShardSpec(kv_axes), "v": ShardSpec(kv_axes), "pos": ShardSpec(())}
+
+
+def decode_step(params, cfg, state, token, *, constrain=_noop_constrain, use_kernel=False):
+    """One decode step. token: (B,) int32. Returns (logits (B,V), new state)."""
+    dtype = _dtype(cfg)
+    B = token.shape[0]
+    pos = state["pos"]
+    x = embed_tokens(params, cfg, token[:, None], None, _noop_constrain)[:, 0]
+    windows = tfm.layer_windows(cfg)
+    thetas = tfm.layer_thetas(cfg)
+    # SWA archs use ring-buffer caches sized to the window; attention is
+    # permutation-invariant over KV entries so ring order needs no masking.
+    ring = cfg.attn_pattern == "swa" and cfg.local_window > 0
+
+    def body(x_t, layer_inputs):
+        lp, k_c, v_c, window, theta = layer_inputs
+        x_t, new_cache = tfm.block_step(
+            lp, x_t, KVCache(k_c, v_c), pos,
+            cfg=cfg, window=window, theta=theta, dtype=dtype,
+            constrain=constrain, ring=ring, use_kernel=use_kernel,
+        )
+        return x_t, {"k": new_cache.k, "v": new_cache.v}
+
+    if cfg.scan_layers:
+        x, new_kv = jax.lax.scan(body, x, (params["blocks"], state["k"], state["v"], windows, thetas))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            x, kv = body(x, (params["blocks"][f"layer_{i}"], state["k"][i], state["v"][i], windows[i], thetas[i]))
+            ks.append(kv["k"])
+            vs.append(kv["v"])
+        new_kv = {"k": jnp.stack(ks, 0), "v": jnp.stack(vs, 0)}
+
+    logits = lm_logits(params, cfg, x[:, None, :], _noop_constrain)[:, 0]
+    new_state = {"k": new_kv["k"], "v": new_kv["v"], "pos": pos + 1}
+    return logits, new_state
+
+
+def prefill(params, cfg, batch, *, constrain=_noop_constrain):
+    """Full-sequence prefill that also materialises the KV caches.
+
+    Returns (last-token logits (B, 1, V), decode state).
+    """
+    logits, aux = forward(
+        params, cfg, batch, constrain=constrain, collect_kv=True, logits_mode="last"
+    )
+    k, v = aux["kv"]
+    S = batch["tokens"].shape[1]
+    state = {"k": k, "v": v, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, state

@@ -1,0 +1,55 @@
+"""Uniform model interface over the architecture families."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, lm, rwkv, whisper
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable  # (key) -> (params, specs)
+    forward: Callable  # (params, batch, *, constrain) -> (logits, aux)
+    prefill: Callable  # (params, batch, *, constrain) -> (logits, state)
+    decode_step: Callable  # (params, state, token, *, constrain) -> (logits, state)
+    init_decode_state: Callable  # (batch, seq_len) -> state pytree
+
+
+_FAMILY_MODULES = {
+    "dense": lm,
+    "moe": lm,
+    "vlm": lm,
+    "rwkv": rwkv,
+    "hybrid": hybrid,
+    "encdec": whisper,
+}
+
+_INITS = {
+    "dense": lm.init_lm,
+    "moe": lm.init_lm,
+    "vlm": lm.init_lm,
+    "rwkv": rwkv.init_rwkv,
+    "hybrid": hybrid.init_hybrid,
+    "encdec": whisper.init_encdec,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    mod = _FAMILY_MODULES[cfg.family]
+    init_fn = _INITS[cfg.family]
+    return Model(
+        cfg=cfg,
+        init=lambda key: init_fn(key, cfg),
+        forward=lambda params, batch, constrain=None, **kw: mod.forward(
+            params, cfg, batch, constrain=constrain or (lambda x, a: x), **kw
+        ),
+        prefill=lambda params, batch, constrain=None: mod.prefill(
+            params, cfg, batch, constrain=constrain or (lambda x, a: x)
+        ),
+        decode_step=lambda params, state, token, constrain=None, **kw: mod.decode_step(
+            params, cfg, state, token, constrain=constrain or (lambda x, a: x), **kw
+        ),
+        init_decode_state=lambda batch_size, seq_len: mod.init_decode_state(cfg, batch_size, seq_len),
+    )

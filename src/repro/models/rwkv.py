@@ -1,0 +1,148 @@
+"""RWKV6 (Finch) language model: attention-free, O(1)-state decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import ssm
+from repro.nn.init import embed_init, split_keys, stack_layer_specs
+from repro.nn.layers import embed as embed_lookup
+from repro.nn.layers import layernorm, layernorm_params
+from repro.nn.transformer import _noop_constrain
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_rwkv(key, cfg):
+    keys = split_keys(key, cfg.n_layers + 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = {}, {}
+    p["embed"]["w"], s["embed"]["w"] = embed_init(keys[0], cfg.vocab, cfg.d_model)
+    p["unembed"], s["unembed"] = {}, {}
+    p["unembed"]["w"], s["unembed"]["w"] = embed_init(keys[1], cfg.vocab, cfg.d_model)
+    p["ln0"], s["ln0"] = layernorm_params(cfg.d_model)
+    layers, layer_specs = [], None
+    for i in range(cfg.n_layers):
+        k_tm, k_cm = split_keys(keys[2 + i], 2)
+        lp, ls = {}, {}
+        lp["ln1"], ls["ln1"] = layernorm_params(cfg.d_model)
+        lp["tm"], ls["tm"] = ssm.rwkv_timemix_params(k_tm, cfg.d_model, cfg.rnn_heads)
+        lp["ln2"], ls["ln2"] = layernorm_params(cfg.d_model)
+        lp["cm"], ls["cm"] = ssm.rwkv_channelmix_params(k_cm, cfg.d_model, cfg.d_ff)
+        layers.append(lp)
+        layer_specs = ls
+    p["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *layers)
+    s["blocks"] = stack_layer_specs(layer_specs)
+    p["final_norm"], s["final_norm"] = layernorm_params(cfg.d_model)
+    return p, s
+
+
+def _block_seq(lp, x, *, cfg, dtype, constrain):
+    B, T, D = x.shape
+    H = cfg.rnn_heads
+    hd = D // H
+    zeros_x = jnp.zeros((B, D), dtype)
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    h = layernorm(lp["ln1"], x, dtype=dtype)
+    y, _, _ = ssm.rwkv_timemix(lp["tm"], h, zeros_x, state0, n_heads=H, dtype=dtype)
+    x = x + y
+    x = constrain(x, ("batch", "seq", None))
+    h = layernorm(lp["ln2"], x, dtype=dtype)
+    y, _ = ssm.rwkv_channelmix(lp["cm"], h, zeros_x, dtype=dtype)
+    x = x + y
+    return constrain(x, ("batch", "seq", None))
+
+
+def forward(params, cfg, batch, *, constrain=_noop_constrain, collect_kv=False):
+    dtype = _dtype(cfg)
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens, dtype=dtype)
+    x = layernorm(params["ln0"], x, dtype=dtype)
+    x = constrain(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        return _block_seq(lp, x, cfg=cfg, dtype=dtype, constrain=constrain), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = layernorm(params["final_norm"], x, dtype=dtype)
+    logits = jnp.einsum("btd,vd->btv", x, params["unembed"]["w"].astype(dtype))
+    return constrain(logits, ("batch", None, "vocab")), {}
+
+
+def init_decode_state(cfg, batch_size: int, seq_len: int):
+    """O(1) state: wkv matrix + token-shift carries per layer. seq_len unused."""
+    H, D = cfg.rnn_heads, cfg.d_model
+    hd = D // H
+    L = cfg.n_layers
+    dtype = _dtype(cfg)
+    return {
+        "wkv": jnp.zeros((L, batch_size, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((L, batch_size, D), dtype),
+        "x_cm": jnp.zeros((L, batch_size, D), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, state, token, *, constrain=_noop_constrain, use_kernel=False):
+    dtype = _dtype(cfg)
+    x = embed_lookup(params["embed"], token[:, None], dtype=dtype)[:, 0]
+    x = layernorm(params["ln0"], x[:, None, :], dtype=dtype)[:, 0]
+    H = cfg.rnn_heads
+
+    def body(x_t, layer_inputs):
+        lp, wkv, x_tm, x_cm = layer_inputs
+        h = layernorm(lp["ln1"], x_t[:, None, :], dtype=dtype)[:, 0]
+        y, x_tm_new, wkv_new = ssm.rwkv_timemix_step(lp["tm"], h, x_tm, wkv, n_heads=H, dtype=dtype)
+        x_t = x_t + y
+        h = layernorm(lp["ln2"], x_t[:, None, :], dtype=dtype)[:, 0]
+        y, x_cm_new = ssm.rwkv_channelmix_step(lp["cm"], h, x_cm, dtype=dtype)
+        x_t = x_t + y
+        return x_t, {"wkv": wkv_new, "x_tm": x_tm_new, "x_cm": x_cm_new}
+
+    x, new_states = jax.lax.scan(
+        body, x, (params["blocks"], state["wkv"], state["x_tm"], state["x_cm"])
+    )
+    x = layernorm(params["final_norm"], x[:, None, :], dtype=dtype)[:, 0]
+    logits = jnp.einsum("bd,vd->bv", x, params["unembed"]["w"].astype(dtype))
+    new_states["pos"] = state["pos"] + 1
+    return logits, new_states
+
+
+def prefill(params, cfg, batch, *, constrain=_noop_constrain):
+    """Prefill = forward + final recurrent state.
+
+    Exact chunk composition: we re-run the per-layer scans carrying state.
+    For the dry-run we use the simple full-sequence scan and capture the
+    final carries by scanning layers with explicit state I/O.
+    """
+    dtype = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    H, D = cfg.rnn_heads, cfg.d_model
+    hd = D // H
+    x = embed_lookup(params["embed"], tokens, dtype=dtype)
+    x = layernorm(params["ln0"], x, dtype=dtype)
+    x = constrain(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        zeros_x = jnp.zeros((B, D), dtype)
+        state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        h = layernorm(lp["ln1"], x, dtype=dtype)
+        y, x_tm, wkv = ssm.rwkv_timemix(lp["tm"], h, zeros_x, state0, n_heads=H, dtype=dtype)
+        x = x + y
+        h = layernorm(lp["ln2"], x, dtype=dtype)
+        y, x_cm = ssm.rwkv_channelmix(lp["cm"], h, zeros_x, dtype=dtype)
+        x = x + y
+        return constrain(x, ("batch", "seq", None)), {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    x = layernorm(params["final_norm"], x[:, -1:, :], dtype=dtype)  # last token only
+    logits = jnp.einsum("btd,vd->btv", x, params["unembed"]["w"].astype(dtype))
+    states["pos"] = jnp.asarray(T, jnp.int32)
+    return logits, states

@@ -1,0 +1,231 @@
+"""Whisper-large-v3 backbone: encoder-decoder transformer.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, enc_seq, d_model). The decoder is
+exercised at the assigned KV lengths (beyond the real model's 448 learned
+positions — structural, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_lib
+from repro.nn.attention import KVCache
+from repro.nn.init import embed_init, split_keys, stack_layer_specs
+from repro.nn.layers import embed as embed_lookup
+from repro.nn.layers import layernorm, layernorm_params, mlp, mlp_params
+from repro.nn.rope import sinusoid_table
+from repro.nn.transformer import _noop_constrain
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _mask_pad_vocab(cfg, logits):
+    """Rows [vocab, padded_vocab) of the padded table are dead tokens."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    dead = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+    return logits + jnp.where(dead, -1e9, 0.0).astype(logits.dtype)
+
+
+def _attn_params(key, cfg, cross=False):
+    return attn_lib.attention_params(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+def _enc_layer_params(key, cfg):
+    k1, k2 = split_keys(key, 2)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = layernorm_params(cfg.d_model)
+    p["attn"], s["attn"] = _attn_params(k1, cfg)
+    p["ln2"], s["ln2"] = layernorm_params(cfg.d_model)
+    p["mlp"], s["mlp"] = mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.d_model)
+    return p, s
+
+
+def _dec_layer_params(key, cfg):
+    k1, k2, k3 = split_keys(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = layernorm_params(cfg.d_model)
+    p["self_attn"], s["self_attn"] = _attn_params(k1, cfg)
+    p["ln_x"], s["ln_x"] = layernorm_params(cfg.d_model)
+    p["cross_attn"], s["cross_attn"] = _attn_params(k2, cfg)
+    p["ln2"], s["ln2"] = layernorm_params(cfg.d_model)
+    p["mlp"], s["mlp"] = mlp_params(k3, cfg.d_model, cfg.d_ff, cfg.d_model)
+    return p, s
+
+
+def init_encdec(key, cfg):
+    keys = split_keys(key, 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = {}, {}
+    p["embed"]["w"], s["embed"]["w"] = embed_init(keys[0], cfg.padded_vocab, cfg.d_model)
+    enc_layers, dec_layers = [], []
+    enc_spec = dec_spec = None
+    for k in split_keys(keys[1], cfg.n_enc_layers):
+        lp, enc_spec = _enc_layer_params(k, cfg)
+        enc_layers.append(lp)
+    for k in split_keys(keys[2], cfg.n_layers):
+        lp, dec_spec = _dec_layer_params(k, cfg)
+        dec_layers.append(lp)
+    stack = lambda ls: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *ls)
+    p["encoder"], s["encoder"] = stack(enc_layers), stack_layer_specs(enc_spec)
+    p["decoder"], s["decoder"] = stack(dec_layers), stack_layer_specs(dec_spec)
+    p["enc_ln"], s["enc_ln"] = layernorm_params(cfg.d_model)
+    p["dec_ln"], s["dec_ln"] = layernorm_params(cfg.d_model)
+    return p, s
+
+
+def _self_attn(lp, x, mask, *, cfg, dtype, collect_kv=False):
+    q, k, v = attn_lib.project_qkv(
+        lp, x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim, dtype=dtype
+    )
+    ctx = attn_lib.mha(q, k, v, mask, dtype=dtype)
+    out = attn_lib.attn_out(lp, ctx, dtype=dtype)
+    return (out, (k, v)) if collect_kv else (out, None)
+
+
+def _cross_kv(lp, enc_out, *, cfg, dtype):
+    B, S, _ = enc_out.shape
+    k = jnp.einsum("btd,dh->bth", enc_out.astype(dtype), lp["wk"].astype(dtype))
+    v = jnp.einsum("btd,dh->bth", enc_out.astype(dtype), lp["wv"].astype(dtype))
+    return (
+        k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+        v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+    )
+
+
+def _cross_attn(lp, x, ck, cv, *, cfg, dtype):
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dh->bth", x.astype(dtype), lp["wq"].astype(dtype))
+    q = q.reshape(B, T, cfg.n_heads, cfg.head_dim)
+    ctx = attn_lib.mha(q, ck, cv, None, dtype=dtype)
+    return attn_lib.attn_out(lp, ctx, dtype=dtype)
+
+
+def encode(params, cfg, frames, *, constrain=_noop_constrain):
+    """frames: (B, enc_seq, d_model) stub embeddings -> encoder output."""
+    dtype = _dtype(cfg)
+    B, S, _ = frames.shape
+    x = frames.astype(dtype) + sinusoid_table(S, cfg.d_model).astype(dtype)[None]
+    x = constrain(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        h = layernorm(lp["ln1"], x, dtype=dtype)
+        y, _ = _self_attn(lp["attn"], h, None, cfg=cfg, dtype=dtype)
+        x = x + y
+        h = layernorm(lp["ln2"], x, dtype=dtype)
+        x = x + mlp(lp["mlp"], h, act=cfg.act, dtype=dtype)
+        return constrain(x, ("batch", "seq", None)), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layernorm(params["enc_ln"], x, dtype=dtype)
+
+
+def forward(params, cfg, batch, *, constrain=_noop_constrain, collect_kv=False, logits_mode="all"):
+    """Teacher-forced decode over full target sequence (train path)."""
+    dtype = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    enc_out = encode(params, cfg, batch["frames"], constrain=constrain)
+    x = embed_lookup(params["embed"], tokens, dtype=dtype)
+    x = x + sinusoid_table(T, cfg.d_model).astype(dtype)[None]
+    x = constrain(x, ("batch", "seq", None))
+    t_ar = jnp.arange(T, dtype=jnp.int32)
+    mask = attn_lib.make_mask(t_ar, t_ar, None)
+    kv_out = {}
+
+    def body(x, lp):
+        h = layernorm(lp["ln1"], x, dtype=dtype)
+        y, kv = _self_attn(lp["self_attn"], h, mask, cfg=cfg, dtype=dtype, collect_kv=collect_kv)
+        x = x + y
+        h = layernorm(lp["ln_x"], x, dtype=dtype)
+        ck, cv = _cross_kv(lp["cross_attn"], enc_out, cfg=cfg, dtype=dtype)
+        x = x + _cross_attn(lp["cross_attn"], h, ck, cv, cfg=cfg, dtype=dtype)
+        h = layernorm(lp["ln2"], x, dtype=dtype)
+        x = x + mlp(lp["mlp"], h, act=cfg.act, dtype=dtype)
+        x = constrain(x, ("batch", "seq", None))
+        ys = {"kv": kv, "cross": (ck, cv)} if collect_kv else {}
+        return x, ys
+
+    if cfg.remat == "full" and not collect_kv:
+        body = jax.checkpoint(body)
+    x, ys = jax.lax.scan(body, x, params["decoder"])
+    if logits_mode == "last":
+        x = x[:, -1:, :]
+    x = layernorm(params["dec_ln"], x, dtype=dtype)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"]["w"].astype(dtype))
+    logits = _mask_pad_vocab(cfg, logits)
+    if logits_mode != "last":
+        logits = constrain(logits, ("batch", None, "vocab"))
+    aux = {}
+    if collect_kv:
+        aux["kv"], aux["cross"] = ys["kv"], ys["cross"]
+    return logits, aux
+
+
+def init_decode_state(cfg, batch_size: int, seq_len: int):
+    dtype = _dtype(cfg)
+    L = cfg.n_layers
+    kv = (L, batch_size, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    cross = (L, batch_size, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv, dtype),
+        "v": jnp.zeros(kv, dtype),
+        "ck": jnp.zeros(cross, dtype),
+        "cv": jnp.zeros(cross, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, state, token, *, constrain=_noop_constrain, use_kernel=False):
+    dtype = _dtype(cfg)
+    B = token.shape[0]
+    pos = state["pos"]
+    x = embed_lookup(params["embed"], token[:, None], dtype=dtype)[:, 0]
+    table = sinusoid_table(state["k"].shape[2], cfg.d_model).astype(dtype)
+    x = x + jax.lax.dynamic_index_in_dim(table, pos, 0, keepdims=False)
+
+    def body(x_t, layer_inputs):
+        lp, k_c, v_c, ck, cv = layer_inputs
+        h = layernorm(lp["ln1"], x_t[:, None, :], dtype=dtype)[:, 0]
+        q, k, v = attn_lib.project_qkv(
+            lp["self_attn"], h[:, None, :], n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, dtype=dtype,
+        )
+        cache = attn_lib.cache_update(KVCache(k_c, v_c), k[:, 0], v[:, 0], pos)
+        cache_len = pos + 1
+        ctx = attn_lib.decode_attention(q[:, 0], cache, cache_len, dtype=dtype, use_kernel=use_kernel)
+        x_t = x_t + attn_lib.attn_out(lp["self_attn"], ctx[:, None], dtype=dtype)[:, 0]
+        h = layernorm(lp["ln_x"], x_t[:, None, :], dtype=dtype)[:, 0]
+        qx = jnp.einsum("bd,dh->bh", h.astype(dtype), lp["cross_attn"]["wq"].astype(dtype))
+        qx = qx.reshape(B, cfg.n_heads, cfg.head_dim)
+        ctx2 = attn_lib.decode_attention(
+            qx, KVCache(ck, cv), jnp.asarray(ck.shape[1], jnp.int32), dtype=dtype
+        )
+        x_t = x_t + attn_lib.attn_out(lp["cross_attn"], ctx2[:, None], dtype=dtype)[:, 0]
+        h = layernorm(lp["ln2"], x_t[:, None, :], dtype=dtype)[:, 0]
+        x_t = x_t + mlp(lp["mlp"], h[:, None, :], act=cfg.act, dtype=dtype)[:, 0]
+        return x_t, {"k": cache.k, "v": cache.v}
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["decoder"], state["k"], state["v"], state["ck"], state["cv"])
+    )
+    x = layernorm(params["dec_ln"], x[:, None, :], dtype=dtype)[:, 0]
+    logits = jnp.einsum("bd,vd->bv", x, params["embed"]["w"].astype(dtype))
+    logits = _mask_pad_vocab(cfg, logits)
+    new_state = {"k": new_kv["k"], "v": new_kv["v"], "ck": state["ck"], "cv": state["cv"], "pos": pos + 1}
+    return logits, new_state
+
+
+def prefill(params, cfg, batch, *, constrain=_noop_constrain):
+    logits, aux = forward(params, cfg, batch, constrain=constrain, collect_kv=True, logits_mode="last")
+    k, v = aux["kv"]
+    ck, cv = aux["cross"]
+    T = batch["tokens"].shape[1]
+    state = {"k": k, "v": v, "ck": ck, "cv": cv, "pos": jnp.asarray(T, jnp.int32)}
+    return logits, state

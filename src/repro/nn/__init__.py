@@ -1,0 +1,27 @@
+"""Pure-JAX neural-network substrate (no flax/optax dependency).
+
+Conventions
+-----------
+* Parameters are nested dicts of jnp arrays ("param trees").
+* Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+  param tree with logical :class:`ShardSpec` leaves used by
+  ``repro.runtime.sharding`` to produce concrete ``PartitionSpec``s.
+* ``apply`` functions are pure: ``f(params, *inputs, cfg) -> outputs``.
+* Compute dtype is taken from the config (bf16 by default); params are
+  stored in ``param_dtype`` (fp32 master copies) and cast at use sites.
+"""
+from repro.nn.init import ShardSpec, dense_init, embed_init, scalar_init
+from repro.nn import layers, rope, attention, moe, ssm, transformer
+
+__all__ = [
+    "ShardSpec",
+    "dense_init",
+    "embed_init",
+    "scalar_init",
+    "layers",
+    "rope",
+    "attention",
+    "moe",
+    "ssm",
+    "transformer",
+]

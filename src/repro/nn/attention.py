@@ -1,0 +1,151 @@
+"""Grouped-query attention: full / sliding-window / cross, train + decode.
+
+All softmax math in fp32; einsum operands in the compute dtype.
+
+Layout conventions:
+  hidden x:      (B, T, D)
+  q:             (B, T, n_heads, head_dim)
+  k, v (cache):  (B, S, n_kv, head_dim)
+GQA is computed by reshaping q heads into (n_kv, group) so the contraction
+is GSPMD-friendly when heads are sharded over the "model" axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import rope as rope_lib
+from repro.nn.init import dense_init, split_keys
+from repro.nn.layers import rmsnorm, rmsnorm_params
+
+NEG_INF = -2.3819763e38  # large negative for masked logits (bf16-safe)
+
+
+def attention_params(key, d_model, n_heads, n_kv, head_dim, *, qk_norm=False):
+    kq, kk, kv, ko = split_keys(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(kq, d_model, n_heads * head_dim, axes=("embed", "heads"))
+    p["wk"], s["wk"] = dense_init(kk, d_model, n_kv * head_dim, axes=("embed", "heads"))
+    p["wv"], s["wv"] = dense_init(kv, d_model, n_kv * head_dim, axes=("embed", "heads"))
+    p["wo"], s["wo"] = dense_init(ko, n_heads * head_dim, d_model, axes=("heads", "embed"))
+    if qk_norm:
+        p["q_norm"], s["q_norm"] = rmsnorm_params(head_dim, axis=None)
+        p["k_norm"], s["k_norm"] = rmsnorm_params(head_dim, axis=None)
+    return p, s
+
+
+def project_qkv(params, x, *, n_heads, n_kv, head_dim, dtype=jnp.bfloat16, qk_norm=False):
+    B, T, _ = x.shape
+    x = x.astype(dtype)
+    q = jnp.einsum("btd,dh->bth", x, params["wq"].astype(dtype)).reshape(B, T, n_heads, head_dim)
+    k = jnp.einsum("btd,dh->bth", x, params["wk"].astype(dtype)).reshape(B, T, n_kv, head_dim)
+    v = jnp.einsum("btd,dh->bth", x, params["wv"].astype(dtype)).reshape(B, T, n_kv, head_dim)
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q, dtype=dtype)
+        k = rmsnorm(params["k_norm"], k, dtype=dtype)
+    return q, k, v
+
+
+def _mask_full_causal(q_pos, k_pos):
+    return k_pos[None, :] <= q_pos[:, None]
+
+
+def _mask_window(q_pos, k_pos, window):
+    causal = k_pos[None, :] <= q_pos[:, None]
+    near = k_pos[None, :] > q_pos[:, None] - window
+    return jnp.logical_and(causal, near)
+
+
+def make_mask(q_pos, k_pos, window: Optional[jax.Array] = None):
+    """Boolean (Tq, Tk) mask. window: scalar int32; <=0 means full causal.
+
+    Passing window as a traced scalar lets scan-over-layers mix local and
+    global layers with a single code path (gemma3 5:1 pattern).
+    """
+    if window is None:
+        return _mask_full_causal(q_pos, k_pos)
+    window = jnp.asarray(window, jnp.int32)
+    full = _mask_full_causal(q_pos, k_pos)
+    local = _mask_window(q_pos, k_pos, window)
+    return jnp.where(window > 0, local, full)
+
+
+def mha(q, k, v, mask=None, *, dtype=jnp.bfloat16, logit_cap: float = 0.0):
+    """Batched GQA attention over full sequences.
+
+    q: (B, Tq, H, hd); k,v: (B, Tk, KV, hd); mask: broadcastable (Tq, Tk) bool.
+    """
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(dtype), k.astype(dtype))
+    logits = logits.astype(jnp.float32) * scale
+    if logit_cap > 0.0:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(dtype))
+    return out.reshape(B, Tq, H, hd)
+
+
+def attn_out(params, ctx, *, dtype=jnp.bfloat16):
+    B, T, H, hd = ctx.shape
+    return jnp.einsum("bth,hd->btd", ctx.reshape(B, T, H * hd).astype(dtype), params["wo"].astype(dtype))
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S, KV, hd)
+    v: jax.Array  # (B, S, KV, hd)
+
+    @staticmethod
+    def zeros(batch, seq, n_kv, head_dim, dtype=jnp.bfloat16):
+        shape = (batch, seq, n_kv, head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_attention(q1, cache: KVCache, cache_len, *, dtype=jnp.bfloat16, window=0, use_kernel: bool = False):
+    """One-token decode attention against a (possibly sharded) KV cache.
+
+    q1: (B, H, hd) query for the new token at position ``cache_len``.
+    cache_len: scalar int32 — number of valid entries in the cache.
+    window: int or traced int32 scalar; >0 restricts attention to the
+    trailing window (linear cache layout only — ring caches pass 0).
+    Returns (B, H, hd).
+    """
+    B, H, hd = q1.shape
+    KV = cache.k.shape[2]
+    S = cache.k.shape[1]
+    G = H // KV
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.decode_attn(q1, cache.k, cache.v, cache_len, window=int(window))
+    qg = q1.reshape(B, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg.astype(dtype), cache.k.astype(dtype))
+    logits = logits.astype(jnp.float32) * scale
+    pos = jnp.arange(S, dtype=jnp.int32)
+    win = jnp.asarray(window, jnp.int32)
+    lo = jnp.where(win > 0, cache_len - win, 0)
+    valid = jnp.logical_and(
+        pos[None, None, None, :] < cache_len, pos[None, None, None, :] >= lo
+    )
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    ctx = jnp.einsum("bkgs,bskh->bkgh", probs, cache.v.astype(dtype))
+    return ctx.reshape(B, H, hd)
+
+
+def cache_update(cache: KVCache, k1, v1, index):
+    """Insert one token's k/v at ``index`` (ring-buffer write for SWA).
+
+    k1, v1: (B, KV, hd). index: scalar int32 (already wrapped for ring use).
+    """
+    k = jax.lax.dynamic_update_slice(cache.k, k1[:, None].astype(cache.k.dtype), (0, index, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v1[:, None].astype(cache.v.dtype), (0, index, 0, 0))
+    return KVCache(k, v)

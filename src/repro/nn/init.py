@@ -1,0 +1,100 @@
+"""Parameter initialisation helpers.
+
+Every initialiser returns ``(array, ShardSpec)``. A ShardSpec names the
+*logical* axes of the parameter; ``repro.runtime.sharding`` maps logical
+axes to physical mesh axes per execution mode (train / serve).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Logical sharding annotation for one parameter.
+
+    ``axes`` has one entry per array dim: a logical-axis name (str) or None.
+    Common logical names: "embed" (d_model-like), "mlp" (ffn hidden),
+    "heads" (attn head dim product), "vocab", "expert", "layers" (scan dim),
+    "kv" (kv-head product), None (replicated).
+    """
+
+    axes: Tuple[Optional[str], ...]
+
+    def __iter__(self):
+        return iter(self.axes)
+
+
+def _truncated_normal(key, shape, stddev, dtype):
+    # 2-sigma truncation like flax's default initializers.
+    unscaled = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (unscaled * stddev).astype(dtype)
+
+
+def dense_init(
+    key: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    *,
+    axes: Sequence[Optional[str]],
+    dtype=jnp.float32,
+    scale: float = 1.0,
+) -> Tuple[jax.Array, ShardSpec]:
+    """Fan-in scaled truncated-normal kernel of shape (in_dim, out_dim)."""
+    stddev = scale / math.sqrt(in_dim)
+    w = _truncated_normal(key, (in_dim, out_dim), stddev, dtype)
+    return w, ShardSpec(tuple(axes))
+
+
+def embed_init(
+    key: jax.Array,
+    vocab: int,
+    dim: int,
+    *,
+    axes: Sequence[Optional[str]] = ("vocab", "embed"),
+    dtype=jnp.float32,
+) -> Tuple[jax.Array, ShardSpec]:
+    # 1/sqrt(dim) keeps tied-unembed logits O(1) at init (CE starts ≈ ln V);
+    # gemma-style sqrt(d_model) embedding scaling restores O(1) activations.
+    w = _truncated_normal(key, (vocab, dim), 1.0 / math.sqrt(dim), dtype)
+    return w, ShardSpec(tuple(axes))
+
+
+def scalar_init(
+    value: float,
+    shape: Sequence[int],
+    *,
+    axes: Sequence[Optional[str]] = None,
+    dtype=jnp.float32,
+) -> Tuple[jax.Array, ShardSpec]:
+    if axes is None:
+        axes = (None,) * len(tuple(shape))
+    return jnp.full(tuple(shape), value, dtype), ShardSpec(tuple(axes))
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_layer_params(layer_params: list):
+    """Stack a list of identical param trees along a new leading 'layers' dim.
+
+    Returns (stacked_params, spec_fn) where specs gain a leading "layers"
+    logical axis (mapped to None physically — scan dim is never sharded).
+    """
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)
+    return stacked
+
+
+def stack_layer_specs(spec_tree):
+    """Prepend a 'layers' axis to every ShardSpec leaf of one layer's specs."""
+    return jax.tree_util.tree_map(
+        lambda s: ShardSpec(("layers",) + tuple(s.axes)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ShardSpec),
+    )

@@ -1,0 +1,165 @@
+"""Basic layers: dense, norms, embeddings, temporal conv, MLPs."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import ShardSpec, dense_init, scalar_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+def dense(params, x, *, dtype=jnp.bfloat16):
+    """x @ w (+ b). params: {"w": (in, out), optional "b": (out,)}."""
+    w = params["w"].astype(dtype)
+    y = jnp.einsum("...i,io->...o", x.astype(dtype), w)
+    if "b" in params:
+        y = y + params["b"].astype(dtype)
+    return y
+
+
+def dense_params(key, in_dim, out_dim, *, axes, bias=False, scale=1.0):
+    w, ws = dense_init(key, in_dim, out_dim, axes=axes, scale=scale)
+    p = {"w": w}
+    s = {"w": ws}
+    if bias:
+        b, bs = scalar_init(0.0, (out_dim,), axes=(axes[-1],))
+        p["b"], s["b"] = b, bs
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(dim, *, axis: Optional[str] = "embed"):
+    g, gs = scalar_init(1.0, (dim,), axes=(axis,))
+    return {"g": g}, {"g": gs}
+
+
+def rmsnorm(params, x, *, eps=1e-6, dtype=jnp.bfloat16, zero_centered=False):
+    """RMSNorm in fp32 math, output in compute dtype.
+
+    ``zero_centered`` follows gemma convention (scale = 1 + g).
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    g = params["g"].astype(jnp.float32)
+    if zero_centered:
+        y = y * (1.0 + g)
+    else:
+        y = y * g
+    return y.astype(dtype)
+
+
+def layernorm_params(dim):
+    g, gs = scalar_init(1.0, (dim,), axes=("embed",))
+    b, bs = scalar_init(0.0, (dim,), axes=("embed",))
+    return {"g": g, "b": b}, {"g": gs, "b": bs}
+
+
+def layernorm(params, x, *, eps=1e-5, dtype=jnp.bfloat16):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["g"].astype(jnp.float32) + params["b"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def embed(params, tokens, *, dtype=jnp.bfloat16):
+    """Token embedding lookup. params: {"w": (V, D)}."""
+    return params["w"].astype(dtype)[tokens]
+
+
+def unembed(params, x, *, dtype=jnp.bfloat16):
+    """Project hidden states to logits with the (tied or separate) table."""
+    return jnp.einsum("...d,vd->...v", x.astype(dtype), params["w"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# activations / MLPs
+# ---------------------------------------------------------------------------
+
+def _act(name):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def gated_mlp_params(key, d_model, d_ff, *, axes_up=("embed", "mlp"), axes_down=("mlp", "embed")):
+    k1, k2, k3 = split_keys(key, 3)
+    p, s = {}, {}
+    p["wi_gate"], s["wi_gate"] = dense_init(k1, d_model, d_ff, axes=axes_up)
+    p["wi_up"], s["wi_up"] = dense_init(k2, d_model, d_ff, axes=axes_up)
+    p["wo"], s["wo"] = dense_init(k3, d_ff, d_model, axes=axes_down)
+    return p, s
+
+
+def gated_mlp(params, x, *, act="silu", dtype=jnp.bfloat16):
+    """SwiGLU-family MLP: wo( act(x@wi_gate) * (x@wi_up) )."""
+    xg = jnp.einsum("...d,df->...f", x.astype(dtype), params["wi_gate"].astype(dtype))
+    xu = jnp.einsum("...d,df->...f", x.astype(dtype), params["wi_up"].astype(dtype))
+    h = _act(act)(xg) * xu
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dtype))
+
+
+def mlp_params(key, d_in, d_hidden, d_out, *, axes_up=("embed", "mlp"), axes_down=("mlp", "embed"), bias=True):
+    k1, k2 = split_keys(key, 2)
+    p, s = {}, {}
+    p["wi"], s["wi"] = dense_params(k1, d_in, d_hidden, axes=axes_up, bias=bias)
+    p["wo"], s["wo"] = dense_params(k2, d_hidden, d_out, axes=axes_down, bias=bias)
+    return p, s
+
+
+def mlp(params, x, *, act="gelu", dtype=jnp.bfloat16):
+    h = _act(act)(dense(params["wi"], x, dtype=dtype))
+    return dense(params["wo"], h, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# temporal (causal) conv1d — used by RG-LRU recurrent block frontends
+# ---------------------------------------------------------------------------
+
+def causal_conv1d_params(key, width, dim):
+    w, _ = dense_init(key, width, dim, axes=(None, "embed"))
+    b, bs = scalar_init(0.0, (dim,), axes=("embed",))
+    return (
+        {"w": w.reshape(width, dim), "b": b},
+        {"w": ShardSpec((None, "embed")), "b": bs},
+    )
+
+
+def causal_conv1d(params, x, *, dtype=jnp.bfloat16):
+    """Depthwise causal temporal conv. x: (B, T, D); w: (W, D)."""
+    w = params["w"].astype(dtype)
+    width = w.shape[0]
+    x = x.astype(dtype)
+    pads = [(0, 0), (width - 1, 0), (0, 0)]
+    xp = jnp.pad(x, pads)
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + xp[:, i : i + x.shape[1], :] * w[i]
+    return y + params["b"].astype(dtype)
+
+
+def causal_conv1d_step(params, x_t, conv_state, *, dtype=jnp.bfloat16):
+    """Single-token decode step. conv_state: (B, W-1, D) past inputs."""
+    w = params["w"].astype(dtype)
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, W, D)
+    y = jnp.einsum("bwd,wd->bd", window.astype(dtype), w) + params["b"].astype(dtype)
+    new_state = window[:, 1:, :] if width > 1 else conv_state
+    return y, new_state

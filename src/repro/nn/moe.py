@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer: top-k routing, GShard-style einsum dispatch.
+
+Design notes (TPU adaptation):
+  * Dispatch/combine are dense einsums over a (groups, group_size, experts,
+    capacity) one-hot tensor — the GSPMD-friendly formulation (no scatters),
+    partitionable over batch ("data") and expert/mlp ("model") axes.
+  * Two sharding modes, chosen per-arch in the config:
+      - "tp": expert weights sharded over the mlp hidden dim ("model" axis),
+        experts replicated. Required when n_experts does not divide the
+        model-axis size (mixtral: 8 experts vs 16-way axis).
+      - "ep": experts sharded over the "model" axis (phi3.5-moe: 16 experts).
+        Dispatch becomes an all-to-all under GSPMD.
+  * Capacity factor bounds the per-expert buffer; overflow tokens are
+    dropped from the expert path (residual passes through), as in GShard.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import ShardSpec, dense_init, split_keys
+
+
+def moe_params(key, d_model, d_ff, n_experts, *, ep: bool = False):
+    kr, kg, ku, ko = split_keys(key, 4)
+    p, s = {}, {}
+    p["router"], s["router"] = dense_init(kr, d_model, n_experts, axes=("embed", None))
+    expert_axis = "expert"
+    # Per-expert gated-MLP weights, stacked on a leading expert dim.
+    def expert_w(k, a, b, axes):
+        w, _ = dense_init(k, a, b * n_experts, axes=(None, None), scale=1.0)
+        w = w.reshape(a, n_experts, b).transpose(1, 0, 2)  # (E, a, b)
+        return w
+
+    p["wi_gate"] = expert_w(kg, d_model, d_ff, None)  # (E, D, F)
+    p["wi_up"] = expert_w(ku, d_model, d_ff, None)  # (E, D, F)
+    p["wo"] = expert_w(ko, d_ff, d_model, None)  # (E, F, D)
+    s["wi_gate"] = ShardSpec((expert_axis, "embed", "mlp"))
+    s["wi_up"] = ShardSpec((expert_axis, "embed", "mlp"))
+    s["wo"] = ShardSpec((expert_axis, "mlp", "embed"))
+    return p, s
+
+
+def _capacity(group_size: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(math.ceil(group_size * top_k / n_experts * factor))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def moe_apply(
+    params,
+    x,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 1024,
+    act=jax.nn.silu,
+    dtype=jnp.bfloat16,
+    constrain: Optional[Callable] = None,
+):
+    """x: (B, T, D) -> (B, T, D). Router in fp32, experts in compute dtype."""
+    B, T, D = x.shape
+    n_tokens = B * T
+    g = min(group_size, n_tokens)
+    G = n_tokens // g
+    assert G * g == n_tokens, f"group_size {g} must divide tokens {n_tokens}"
+    xt = x.reshape(G, g, D)
+    if constrain is not None:
+        xt = constrain(xt, ("batch", None, None))
+
+    # --- routing (fp32) ---
+    router_logits = jnp.einsum(
+        "Ggd,de->Gge", xt.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    gate_vals, gate_idx = jax.lax.top_k(router_logits, top_k)  # (G, g, k)
+    gate_probs = jax.nn.softmax(gate_vals, axis=-1)  # normalize over selected
+
+    C = _capacity(g, n_experts, top_k, capacity_factor)
+
+    # --- position-in-expert via cumulative one-hot (token-major, choice-minor)
+    flat_idx = gate_idx.reshape(G, g * top_k)
+    onehot = jax.nn.one_hot(flat_idx, n_experts, dtype=jnp.int32)  # (G, g*k, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot  # position of each choice
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1).reshape(G, g, top_k)
+    keep = pos < C  # overflow drops
+
+    # --- dispatch / combine tensors: (G, g, E, C) ---
+    e_oh = jax.nn.one_hot(gate_idx, n_experts, dtype=dtype)  # (G,g,k,E)
+    c_oh = jax.nn.one_hot(pos, C, dtype=dtype)  # (G,g,k,C)
+    keep_f = keep.astype(dtype)[..., None, None]
+    disp_k = e_oh[..., :, None] * c_oh[..., None, :] * keep_f  # (G,g,k,E,C)
+    dispatch = jnp.sum(disp_k, axis=2)  # (G,g,E,C)
+    combine = jnp.sum(disp_k * gate_probs.astype(dtype)[..., None, None], axis=2)
+
+    # --- expert compute ---
+    expert_in = jnp.einsum("GgEC,Ggd->GECd", dispatch, xt.astype(dtype))
+    if constrain is not None:
+        expert_in = constrain(expert_in, ("batch", "expert", None, None))
+    hg = jnp.einsum("GECd,Edf->GECf", expert_in, params["wi_gate"].astype(dtype))
+    hu = jnp.einsum("GECd,Edf->GECf", expert_in, params["wi_up"].astype(dtype))
+    h = act(hg) * hu
+    expert_out = jnp.einsum("GECf,Efd->GECd", h, params["wo"].astype(dtype))
+    if constrain is not None:
+        expert_out = constrain(expert_out, ("batch", "expert", None, None))
+
+    out = jnp.einsum("GgEC,GECd->Ggd", combine, expert_out)
+    return out.reshape(B, T, D), router_logits
+
+
+def load_balancing_loss(router_logits, gate_idx_top1=None, *, n_experts: int):
+    """Switch-style auxiliary loss: n_e * sum_e f_e * p_e.
+
+    router_logits: (G, g, E) fp32.
+    """
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top1 = jnp.argmax(router_logits, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top1, n_experts, dtype=jnp.float32), axis=(0, 1))
+    p = jnp.mean(probs, axis=(0, 1))
+    return n_experts * jnp.sum(f * p)

@@ -1,0 +1,68 @@
+"""Rotary position embeddings: standard RoPE, M-RoPE (Qwen2-VL), sinusoid."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Apply rotary embedding.
+
+    x: (..., T, H, head_dim); positions: broadcastable to (..., T) int32.
+    Rotation in fp32, returned in x.dtype.
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, sections, theta: float = 10000.0):
+    """Multimodal RoPE (Qwen2-VL §2.1): head_dim/2 freq slots are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, T, H, head_dim); positions_thw: (3, B, T) int32;
+    sections: 3-tuple summing to head_dim // 2, e.g. (16, 24, 24) for hd=128.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    # Build per-slot positions: slot j uses the section it belongs to.
+    section_id = np.concatenate(
+        [np.full(s, i, dtype=np.int32) for i, s in enumerate(sections)]
+    )  # (half,)
+    section_id = jnp.asarray(section_id)
+    # positions_thw: (3, B, T) -> per-slot positions (B, T, half)
+    pos = jnp.take(positions_thw, section_id, axis=0)  # (half, B, T) ordered (slot,B,T)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)  # (B, T, half)
+    angles = pos * freqs  # (B, T, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions):
+    """For pure-text tokens, all three M-RoPE components share the index."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+def sinusoid_table(length: int, dim: int):
+    """Whisper-style fixed sinusoidal embeddings, shape (length, dim)."""
+    log_timescale = np.log(10000.0) / (dim // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(dim // 2))
+    scaled = np.arange(length)[:, None] * inv[None, :]
+    table = np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1)
+    return jnp.asarray(table, dtype=jnp.float32)

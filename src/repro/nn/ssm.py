@@ -1,0 +1,297 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both are linear recurrences with data-dependent diagonal decay. Training and
+prefill use either an exact associative scan (RG-LRU) or a time scan (RWKV6
+matrix-valued state); decode is a single-step state update (O(1) in seq).
+
+TPU adaptation note (DESIGN.md §4): the paper's sub-trace parallelism is an
+*approximation* (lost context at boundaries). For linear recurrences the
+analogous chunking is exact — chunk states compose associatively — so the
+chunked/parallel forms here incur no accuracy loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import ShardSpec, dense_init, scalar_init, split_keys
+from repro.nn.layers import causal_conv1d, causal_conv1d_params, causal_conv1d_step
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru_params(key, d_rnn, n_heads):
+    """Block-diagonal input/recurrence gates + per-channel decay Λ."""
+    kx, ka = split_keys(key, 2)
+    block = d_rnn // n_heads
+    p, s = {}, {}
+
+    def block_diag(k):
+        w, _ = dense_init(k, block, block * n_heads, axes=(None, None))
+        return w.reshape(block, n_heads, block).transpose(1, 0, 2)  # (H, b, b)
+
+    p["w_input_gate"] = block_diag(kx)
+    p["w_rec_gate"] = block_diag(ka)
+    s["w_input_gate"] = ShardSpec((None, None, "embed"))
+    s["w_rec_gate"] = ShardSpec((None, None, "embed"))
+    p["b_input_gate"], s["b_input_gate"] = scalar_init(0.0, (d_rnn,), axes=("embed",))
+    p["b_rec_gate"], s["b_rec_gate"] = scalar_init(0.0, (d_rnn,), axes=("embed",))
+    # softplus(Λ) ~ 0.1 → a ≈ exp(-0.8 r): decays in (0.45, 1.0)
+    lam0 = math.log(math.expm1(0.1))
+    p["lam"], s["lam"] = scalar_init(lam0, (d_rnn,), axes=("embed",))
+    return p, s
+
+
+def _rglru_gates(params, x, n_heads, dtype):
+    """x: (..., d_rnn) -> (input_gate, rec_gate, log_a) each (..., d_rnn)."""
+    shape = x.shape
+    H = n_heads
+    xb = x.reshape(shape[:-1] + (H, shape[-1] // H)).astype(jnp.float32)
+    wi = params["w_input_gate"].astype(jnp.float32)
+    wr = params["w_rec_gate"].astype(jnp.float32)
+    gi = jnp.einsum("...hb,hbc->...hc", xb, wi).reshape(shape)
+    gr = jnp.einsum("...hb,hbc->...hc", xb, wr).reshape(shape)
+    i_gate = jax.nn.sigmoid(gi + params["b_input_gate"].astype(jnp.float32))
+    r_gate = jax.nn.sigmoid(gr + params["b_rec_gate"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r_gate
+    return i_gate, r_gate, log_a
+
+
+def rglru(params, x, h0=None, *, n_heads, dtype=jnp.bfloat16):
+    """Sequence-mode RG-LRU via associative scan.
+
+    x: (B, T, d_rnn). Returns (y, h_last). fp32 recurrence math.
+    """
+    B, T, D = x.shape
+    i_gate, _, log_a = _rglru_gates(params, x, n_heads, dtype)
+    a = jnp.exp(log_a)  # (B, T, D) fp32
+    gated_x = x.astype(jnp.float32) * i_gate
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * gated_x
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(dtype), h[:, -1, :]
+
+
+def rglru_step(params, x_t, h, *, n_heads, dtype=jnp.bfloat16):
+    """Single-token decode step. x_t: (B, d_rnn); h: (B, d_rnn) fp32."""
+    i_gate, _, log_a = _rglru_gates(params, x_t, n_heads, dtype)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * (x_t.astype(jnp.float32) * i_gate)
+    h_new = a * h + b
+    return h_new.astype(dtype), h_new
+
+
+def recurrent_block_params(key, d_model, d_rnn, n_heads, conv_width=4):
+    kx, ky, kc, kr, ko = split_keys(key, 5)
+    p, s = {}, {}
+    p["wx"], s["wx"] = dense_init(kx, d_model, d_rnn, axes=("embed", "mlp"))
+    p["wy"], s["wy"] = dense_init(ky, d_model, d_rnn, axes=("embed", "mlp"))
+    p["conv"], s["conv"] = causal_conv1d_params(kc, conv_width, d_rnn)
+    p["rglru"], s["rglru"] = rglru_params(kr, d_rnn, n_heads)
+    p["wo"], s["wo"] = dense_init(ko, d_rnn, d_model, axes=("mlp", "embed"))
+    return p, s
+
+
+class RecurrentState(NamedTuple):
+    h: jax.Array  # (B, d_rnn) fp32 RG-LRU state
+    conv: jax.Array  # (B, conv_width-1, d_rnn) conv lookback
+
+    @staticmethod
+    def zeros(batch, d_rnn, conv_width=4, dtype=jnp.float32):
+        return RecurrentState(
+            jnp.zeros((batch, d_rnn), dtype),
+            jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+        )
+
+
+def recurrent_block(params, x, *, n_heads, dtype=jnp.bfloat16):
+    """Griffin recurrent block, sequence mode. x: (B, T, D) -> (B, T, D)."""
+    xb = jnp.einsum("btd,dr->btr", x.astype(dtype), params["wx"].astype(dtype))
+    yb = jnp.einsum("btd,dr->btr", x.astype(dtype), params["wy"].astype(dtype))
+    yb = jax.nn.gelu(yb)
+    xb = causal_conv1d(params["conv"], xb, dtype=dtype)
+    h, _ = rglru(params["rglru"], xb, n_heads=n_heads, dtype=dtype)
+    out = h * yb
+    return jnp.einsum("btr,rd->btd", out, params["wo"].astype(dtype))
+
+
+def recurrent_block_step(params, x_t, state: RecurrentState, *, n_heads, dtype=jnp.bfloat16):
+    """Decode step. x_t: (B, D)."""
+    xb = jnp.einsum("bd,dr->br", x_t.astype(dtype), params["wx"].astype(dtype))
+    yb = jax.nn.gelu(jnp.einsum("bd,dr->br", x_t.astype(dtype), params["wy"].astype(dtype)))
+    xb, conv_state = causal_conv1d_step(params["conv"], xb, state.conv.astype(dtype), dtype=dtype)
+    h_out, h_new = rglru_step(params["rglru"], xb, state.h, n_heads=n_heads, dtype=dtype)
+    out = h_out * yb
+    y = jnp.einsum("br,rd->bd", out, params["wo"].astype(dtype))
+    return y, RecurrentState(h_new, conv_state.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+LORA_DIM = 32
+
+
+def _lora_params(key, d_model, out_dim, hidden=LORA_DIM):
+    k1, k2 = split_keys(key, 2)
+    a, _ = dense_init(k1, d_model, hidden, axes=("embed", None))
+    b, _ = dense_init(k2, hidden, out_dim, axes=(None, "embed"), scale=0.1)
+    return {"a": a, "b": b}, {"a": ShardSpec(("embed", None)), "b": ShardSpec((None, "embed"))}
+
+
+def _lora(params, x):
+    h = jnp.tanh(x.astype(jnp.float32) @ params["a"].astype(jnp.float32))
+    return h @ params["b"].astype(jnp.float32)
+
+
+def rwkv_timemix_params(key, d_model, n_heads):
+    keys = split_keys(key, 12)
+    p, s = {}, {}
+    for i, name in enumerate(["wr", "wk", "wv", "wg", "wo"]):
+        axes = ("embed", "heads") if name != "wo" else ("heads", "embed")
+        p[name], s[name] = dense_init(keys[i], d_model, d_model, axes=axes)
+    # token-shift data-dependent lerp factors (Finch ddlerp, simplified to
+    # static mu + LoRA delta on the decay/receptance paths)
+    for j, name in enumerate(["mu_r", "mu_k", "mu_v", "mu_g", "mu_w"]):
+        p[name], s[name] = scalar_init(0.5, (d_model,), axes=("embed",))
+    p["w0"], s["w0"] = scalar_init(-6.0, (d_model,), axes=("embed",))
+    p["decay_lora"], s["decay_lora"] = _lora_params(keys[5], d_model, d_model)
+    p["u"], s["u"] = scalar_init(0.0, (d_model,), axes=("embed",))
+    # per-head output groupnorm
+    p["ln_g"], s["ln_g"] = scalar_init(1.0, (d_model,), axes=("embed",))
+    p["ln_b"], s["ln_b"] = scalar_init(0.0, (d_model,), axes=("embed",))
+    return p, s
+
+
+def _headify(x, n_heads):
+    *lead, D = x.shape
+    return x.reshape(*lead, n_heads, D // n_heads)
+
+
+def _group_norm(x, g, b, eps=1e-5):
+    """Per-head layer norm. x: (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    *lead, H, hd = x.shape
+    y = y.reshape(*lead, H * hd) * g.astype(jnp.float32) + b.astype(jnp.float32)
+    return y
+
+
+def _timemix_inputs(params, x, x_prev, dtype):
+    """Token-shift lerps + projections. x, x_prev: (B, T, D)."""
+
+    def lerp(mu):
+        m = params[mu].astype(jnp.float32)
+        return (x.astype(jnp.float32) * (1 - m) + x_prev.astype(jnp.float32) * m).astype(dtype)
+
+    xr, xk, xv, xg, xw = (lerp(m) for m in ["mu_r", "mu_k", "mu_v", "mu_g", "mu_w"])
+    r = jnp.einsum("...d,dh->...h", xr, params["wr"].astype(dtype))
+    k = jnp.einsum("...d,dh->...h", xk, params["wk"].astype(dtype))
+    v = jnp.einsum("...d,dh->...h", xv, params["wv"].astype(dtype))
+    g = jax.nn.silu(jnp.einsum("...d,dh->...h", xg, params["wg"].astype(dtype)))
+    # data-dependent decay (fp32): w = exp(-exp(w0 + lora(xw)))
+    log_neg_log_w = params["w0"].astype(jnp.float32) + _lora(params["decay_lora"], xw)
+    w = jnp.exp(-jnp.exp(log_neg_log_w))  # in (0, 1)
+    return r, k, v, g, w
+
+
+def rwkv_timemix(params, x, x_last, state0, *, n_heads, dtype=jnp.bfloat16):
+    """Sequence mode. x: (B, T, D); x_last: (B, D) previous-token carry;
+    state0: (B, H, hd, hd) fp32 wkv state. Returns (y, x_last', state')."""
+    B, T, D = x.shape
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, w = _timemix_inputs(params, x, x_prev, dtype)
+    rh, kh, vh = (_headify(t, n_heads).astype(jnp.float32) for t in (r, k, v))
+    wh = _headify(w, n_heads)  # (B, T, H, hd) fp32
+    uh = _headify(params["u"].astype(jnp.float32), n_heads)  # (H, hd)
+
+    def step(S, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B,H,hd) each
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        y_t = jnp.einsum("bhi,bhij->bhj", r_t, S + uh[None, :, :, None] * kv)
+        S_new = w_t[..., None] * S + kv
+        return S_new, y_t
+
+    xs = (
+        jnp.moveaxis(rh, 1, 0),
+        jnp.moveaxis(kh, 1, 0),
+        jnp.moveaxis(vh, 1, 0),
+        jnp.moveaxis(wh, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, D)  # (B, T, D) fp32
+    y = _group_norm(y.reshape(B, T, n_heads, D // n_heads), params["ln_g"], params["ln_b"])
+    y = (y * g.astype(jnp.float32).reshape(B, T, D)).astype(dtype)
+    out = jnp.einsum("btd,dh->bth", y, params["wo"].astype(dtype))
+    return out, x[:, -1, :], state
+
+
+def rwkv_timemix_step(params, x_t, x_last, state, *, n_heads, dtype=jnp.bfloat16):
+    """Decode step. x_t: (B, D); state: (B, H, hd, hd) fp32."""
+    B, D = x_t.shape
+    r, k, v, g, w = _timemix_inputs(params, x_t, x_last, dtype)
+    rh, kh, vh = (_headify(t, n_heads).astype(jnp.float32) for t in (r, k, v))
+    wh = _headify(w, n_heads)
+    uh = _headify(params["u"].astype(jnp.float32), n_heads)
+    kv = jnp.einsum("bhi,bhj->bhij", kh, vh)
+    y = jnp.einsum("bhi,bhij->bhj", rh, state.astype(jnp.float32) + uh[None, :, :, None] * kv)
+    state_new = wh[..., None] * state.astype(jnp.float32) + kv
+    y = _group_norm(y.reshape(B, 1, n_heads, D // n_heads), params["ln_g"], params["ln_b"])[:, 0]
+    y = (y * g.astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("bd,dh->bh", y, params["wo"].astype(dtype))
+    return out, x_t, state_new
+
+
+def rwkv_channelmix_params(key, d_model, d_ff):
+    kk, kv, kr = split_keys(key, 3)
+    p, s = {}, {}
+    p["wk"], s["wk"] = dense_init(kk, d_model, d_ff, axes=("embed", "mlp"))
+    p["wv"], s["wv"] = dense_init(kv, d_ff, d_model, axes=("mlp", "embed"))
+    p["wr"], s["wr"] = dense_init(kr, d_model, d_model, axes=("embed", "embed2"))
+    p["mu_k"], s["mu_k"] = scalar_init(0.5, (d_model,), axes=("embed",))
+    p["mu_r"], s["mu_r"] = scalar_init(0.5, (d_model,), axes=("embed",))
+    return p, s
+
+
+def rwkv_channelmix(params, x, x_last, *, dtype=jnp.bfloat16):
+    """x: (B, T, D); x_last: (B, D). Returns (y, new x_last)."""
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+
+    def lerp(mu):
+        m = params[mu].astype(jnp.float32)
+        return (x.astype(jnp.float32) * (1 - m) + x_prev.astype(jnp.float32) * m).astype(dtype)
+
+    xk, xr = lerp("mu_k"), lerp("mu_r")
+    k = jnp.square(jax.nn.relu(jnp.einsum("...d,df->...f", xk, params["wk"].astype(dtype))))
+    kv = jnp.einsum("...f,fd->...d", k, params["wv"].astype(dtype))
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, params["wr"].astype(dtype)))
+    return r * kv, x[:, -1, :]
+
+
+def rwkv_channelmix_step(params, x_t, x_last, *, dtype=jnp.bfloat16):
+    def lerp(mu):
+        m = params[mu].astype(jnp.float32)
+        return (x_t.astype(jnp.float32) * (1 - m) + x_last.astype(jnp.float32) * m).astype(dtype)
+
+    xk, xr = lerp("mu_k"), lerp("mu_r")
+    k = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk, params["wk"].astype(dtype))))
+    kv = jnp.einsum("bf,fd->bd", k, params["wv"].astype(dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, params["wr"].astype(dtype)))
+    return r * kv, x_t

@@ -1,0 +1,214 @@
+"""Decoder blocks (dense / MoE) in sequence mode and single-token decode mode.
+
+Per-layer *traced* scalars (sliding window, rope theta) keep the computation
+uniform so heterogeneous layer patterns (gemma3's 5:1 local:global) still
+lower through a single scan-over-layers body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_lib
+from repro.nn import moe as moe_lib
+from repro.nn import rope as rope_lib
+from repro.nn.attention import KVCache
+from repro.nn.init import split_keys
+from repro.nn.layers import gated_mlp, gated_mlp_params, layernorm, layernorm_params, rmsnorm, rmsnorm_params
+
+
+# ---------------------------------------------------------------------------
+# norm dispatch
+# ---------------------------------------------------------------------------
+
+def norm_params(cfg, dim):
+    if cfg.norm == "layernorm":
+        return layernorm_params(dim)
+    return rmsnorm_params(dim)
+
+
+def norm_apply(cfg, params, x, dtype):
+    if cfg.norm == "layernorm":
+        return layernorm(params, x, eps=cfg.norm_eps, dtype=dtype)
+    return rmsnorm(params, x, eps=cfg.norm_eps, dtype=dtype, zero_centered=cfg.zero_centered_norm)
+
+
+def _noop_constrain(x, axes):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# block params
+# ---------------------------------------------------------------------------
+
+def block_params(key, cfg):
+    """One decoder block (dense or MoE depending on cfg)."""
+    k_attn, k_mlp, k1, k2, k3 = split_keys(key, 5)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = norm_params(cfg, cfg.d_model)
+    p["attn"], s["attn"] = attn_lib.attention_params(
+        k_attn, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, qk_norm=cfg.qk_norm
+    )
+    if cfg.post_attn_norm:
+        p["ln1_post"], s["ln1_post"] = norm_params(cfg, cfg.d_model)
+    p["ln2"], s["ln2"] = norm_params(cfg, cfg.d_model)
+    if cfg.family == "moe":
+        p["moe"], s["moe"] = moe_lib.moe_params(k_mlp, cfg.d_model, cfg.d_ff, cfg.n_experts, ep=cfg.moe_ep)
+    else:
+        p["mlp"], s["mlp"] = gated_mlp_params(k_mlp, cfg.d_model, cfg.d_ff)
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# sequence mode (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_rope_qk(cfg, q, k, positions, theta):
+    if cfg.mrope:
+        q = rope_lib.apply_mrope(q, positions, cfg.mrope_sections, theta)
+        k = rope_lib.apply_mrope(k, positions, cfg.mrope_sections, theta)
+    else:
+        q = rope_lib.apply_rope(q, positions, theta)
+        k = rope_lib.apply_rope(k, positions, theta)
+    return q, k
+
+
+def block_seq(
+    params,
+    x,
+    positions,
+    *,
+    cfg,
+    window,
+    theta,
+    dtype,
+    constrain: Callable = _noop_constrain,
+    return_kv: bool = False,
+    use_rope: bool = True,
+):
+    """Full-sequence block. x: (B, T, D); positions: (B,T) or (3,B,T) for mrope.
+
+    window/theta may be traced scalars (per-layer scan inputs).
+    Returns (x_out, aux) where aux holds router logits and optionally (k, v).
+    """
+    aux = {}
+    T = x.shape[1]
+    h = norm_apply(cfg, params["ln1"], x, dtype)
+    q, k, v = attn_lib.project_qkv(
+        params["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, dtype=dtype, qk_norm=cfg.qk_norm,
+    )
+    if use_rope:
+        q, k = _apply_rope_qk(cfg, q, k, positions, theta)
+    if return_kv:
+        aux["kv"] = (k, v)
+    t_ar = jnp.arange(T, dtype=jnp.int32)
+    mask = attn_lib.make_mask(t_ar, t_ar, window)
+    ctx = attn_lib.mha(q, k, v, mask, dtype=dtype, logit_cap=cfg.logit_cap)
+    a = attn_lib.attn_out(params["attn"], ctx, dtype=dtype)
+    if cfg.post_attn_norm:
+        a = norm_apply(cfg, params["ln1_post"], a, dtype)
+    x = x + a
+    x = constrain(x, ("batch", "seq", None))
+
+    h = norm_apply(cfg, params["ln2"], x, dtype)
+    if cfg.family == "moe":
+        m, router_logits = moe_lib.moe_apply(
+            params["moe"], h,
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, group_size=cfg.moe_group_size,
+            dtype=dtype, constrain=constrain,
+        )
+        aux["router_logits"] = router_logits
+    else:
+        m = gated_mlp(params["mlp"], h, act=cfg.act, dtype=dtype)
+    x = x + m
+    x = constrain(x, ("batch", "seq", None))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode mode (single token)
+# ---------------------------------------------------------------------------
+
+def block_step(
+    params,
+    x_t,
+    cache: KVCache,
+    pos,
+    *,
+    cfg,
+    window,
+    theta,
+    dtype,
+    constrain: Callable = _noop_constrain,
+    ring: bool = False,
+    use_rope: bool = True,
+    use_kernel: bool = False,
+):
+    """Single-token decode. x_t: (B, D); pos: scalar int32 absolute position.
+
+    ``ring``: cache is a ring buffer sized to the window (no extra masking
+    needed — attention is permutation-invariant over KV entries).
+    Returns (x_out, new_cache).
+    """
+    B, D = x_t.shape
+    S_cache = cache.k.shape[1]
+    h = norm_apply(cfg, params["ln1"], x_t[:, None, :], dtype)
+    q, k, v = attn_lib.project_qkv(
+        params["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, dtype=dtype, qk_norm=cfg.qk_norm,
+    )
+    if use_rope:
+        if cfg.mrope:
+            pos_b = jnp.broadcast_to(pos[..., None, None], (3, B, 1)) if pos.ndim else jnp.full((3, B, 1), pos)
+            q, k = _apply_rope_qk(cfg, q, k, pos_b, theta)
+        else:
+            pos_b = jnp.full((B, 1), pos, jnp.int32)
+            q, k = _apply_rope_qk(cfg, q, k, pos_b, theta)
+    idx = jnp.mod(pos, S_cache) if ring else pos
+    cache = attn_lib.cache_update(cache, k[:, 0], v[:, 0], idx)
+    cache_len = jnp.minimum(pos + 1, S_cache)
+    win = jnp.asarray(0 if ring else window, jnp.int32)
+    ctx = attn_lib.decode_attention(
+        q[:, 0], cache, cache_len, dtype=dtype, window=win, use_kernel=use_kernel
+    )
+    a = attn_lib.attn_out(params["attn"], ctx[:, None], dtype=dtype)[:, 0]
+    if cfg.post_attn_norm:
+        a = norm_apply(cfg, params["ln1_post"], a, dtype)
+    x_t = x_t + a
+
+    h = norm_apply(cfg, params["ln2"], x_t[:, None, :], dtype)
+    if cfg.family == "moe":
+        m, _ = moe_lib.moe_apply(
+            params["moe"], h,
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+            group_size=min(cfg.moe_group_size, B),
+            dtype=dtype, constrain=constrain,
+        )
+    else:
+        m = gated_mlp(params["mlp"], h, act=cfg.act, dtype=dtype)
+    x_t = x_t + m[:, 0]
+    return x_t, cache
+
+
+# ---------------------------------------------------------------------------
+# per-layer static schedules (as arrays, for scan xs)
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg) -> jnp.ndarray:
+    return jnp.asarray([cfg.layer_window(i) for i in range(cfg.n_layers)], jnp.int32)
+
+
+def layer_thetas(cfg) -> jnp.ndarray:
+    ths = []
+    for i in range(cfg.n_layers):
+        if cfg.attn_pattern == "local_global" and cfg.layer_window(i) == 0 and cfg.rope_theta_global:
+            ths.append(cfg.rope_theta_global)
+        else:
+            ths.append(cfg.rope_theta)
+    return jnp.asarray(ths, jnp.float32)

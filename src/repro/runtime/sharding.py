@@ -1,0 +1,117 @@
+"""Logical-axis → mesh-axis rule tables and sharding helpers.
+
+Logical axes used by param ShardSpecs and activation constraints:
+  embed    d_model dim of weight matrices (FSDP-sharded in train mode)
+  embed2   secondary d_model (square matrices: rwkv wr)
+  mlp      ffn hidden dim (tensor-parallel)
+  heads    attention head product dim (tensor-parallel)
+  vocab    vocabulary dim (tensor-parallel)
+  expert   MoE expert dim (expert-parallel when cfg.moe_ep)
+  layers   scan-stacked layer dim (never sharded)
+  batch    activation batch dim (data-parallel, pods × data)
+  seq      activation sequence dim (sequence-parallel over "model")
+  kvseq    KV-cache sequence dim (sharded over "model"; over everything
+           for long-context batch-1 decode)
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.init import ShardSpec
+
+
+def rules_for(cfg, mode: str) -> dict:
+    """mode: train | prefill | decode | decode_long."""
+    moe_ep = bool(getattr(cfg, "moe_ep", False))
+    train = mode == "train"
+    rules = {
+        "embed": "data" if train else None,
+        "embed2": "model",
+        "mlp": None if moe_ep else "model",
+        "heads": "model",
+        "vocab": "model",
+        "expert": "model" if moe_ep else None,
+        "layers": None,
+        "batch": ("pod", "data"),
+        "seq": "model" if getattr(cfg, "seq_shard_activations", True) else None,
+        "kvseq": "model",
+    }
+    if mode == "decode_long":
+        rules["batch"] = None
+        rules["kvseq"] = ("pod", "data", "model")
+    return rules
+
+
+def _filter_axes(entry, mesh_axes):
+    """Drop physical axes not present in the mesh (e.g. 'pod' single-pod)."""
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in mesh_axes else None
+    kept = tuple(a for a in entry if a in mesh_axes)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def to_pspec(axes: Sequence, rules: dict, mesh_axes: Sequence[str]) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        else:
+            out.append(_filter_axes(rules.get(a), mesh_axes))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_tree_to_shardings(spec_tree, rules, mesh: Mesh):
+    """Map a tree of ShardSpec leaves to NamedShardings."""
+    mesh_axes = mesh.axis_names
+
+    def convert(s):
+        if isinstance(s, ShardSpec):
+            return NamedSharding(mesh, to_pspec(s.axes, rules, mesh_axes))
+        raise TypeError(f"expected ShardSpec, got {type(s)}")
+
+    return jax.tree_util.tree_map(convert, spec_tree, is_leaf=lambda x: isinstance(x, ShardSpec))
+
+
+def make_constrain(mesh: Mesh, rules: dict) -> Callable:
+    """Returns constrain(x, logical_axes) for activation sharding hints.
+
+    The returned callable also exposes ``constrain.tree(tree, spec_tree)``
+    for constraining parameter slices inside scan bodies — the lever that
+    keeps scan-stacked weight GRADIENTS sharded through the backward loop
+    (wsc transposes to wsc on the cotangent; see EXPERIMENTS.md §Perf).
+    """
+    mesh_axes = mesh.axis_names
+
+    def constrain(x, logical_axes):
+        spec = to_pspec(tuple(logical_axes), rules, mesh_axes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def constrain_tree(tree, spec_tree):
+        def one(x, s):
+            spec = to_pspec(s.axes, rules, mesh_axes)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map(
+            one, tree, spec_tree, is_leaf=lambda x: isinstance(x, ShardSpec)
+        )
+
+    constrain.tree = constrain_tree
+    return constrain
+
+
+def named(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*axes))
+
+
+def batch_pspec(rules, mesh_axes) -> P:
+    return to_pspec(("batch",), rules, mesh_axes)

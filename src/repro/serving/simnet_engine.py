@@ -1,0 +1,126 @@
+"""Distributed SimNet parallel-simulation engine (paper §3.3, TPU-native).
+
+Lanes (= the paper's sub-traces) are a batch axis sharded over the mesh's
+data axes; the predictor weights are replicated (tiny). The whole
+simulation — context management, inference, clock — is ONE jitted scan, so
+multi-device scaling has the paper's "no inter-device communication"
+property: the only collective is the final lane-cycle reduction.
+
+``input_specs()`` / ``lower()`` make the engine dry-runnable on the
+production mesh alongside the LM pool (simnet-c3 / simnet-rb7 arch cells).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import features as F
+from repro.core.predictor import PredictorConfig, make_predict_fn
+from repro.core.simulator import SimConfig, SimState, drain_cycles, init_state, make_sim_scan
+
+
+def _lane_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def lane_sharding(mesh):
+    ax = _lane_axes(mesh)
+    return NamedSharding(mesh, P(ax if len(ax) > 1 else ax[0]))
+
+
+def state_shardings(mesh):
+    lanes = lane_sharding(mesh)
+
+    def shard(x):
+        return lanes  # every SimState leaf is lane-major
+
+    return SimState(*[lanes for _ in SimState._fields])
+
+
+def chunk_specs(n_lanes: int, chunk: int):
+    """ShapeDtypeStructs for one scan chunk of trace input."""
+    return {
+        "feat": jax.ShapeDtypeStruct((chunk, n_lanes, F.STATIC_END), jnp.float32),
+        "addr": jax.ShapeDtypeStruct((chunk, n_lanes, F.N_ADDR_KEYS), jnp.int32),
+        "is_store": jax.ShapeDtypeStruct((chunk, n_lanes), jnp.bool_),
+        "labels": jax.ShapeDtypeStruct((chunk, n_lanes, 3), jnp.float32),
+    }
+
+
+def chunk_shardings(mesh):
+    lanes_axes = _lane_axes(mesh)
+    spec = P(None, lanes_axes if len(lanes_axes) > 1 else lanes_axes[0])
+    s = NamedSharding(mesh, spec)
+    return {"feat": s, "addr": s, "is_store": s, "labels": s}
+
+
+class SimNetEngine:
+    def __init__(self, params, pcfg: PredictorConfig, sim_cfg: Optional[SimConfig] = None,
+                 mesh=None, use_kernel: bool = False):
+        self.params = params
+        self.pcfg = pcfg
+        self.sim_cfg = sim_cfg or SimConfig(ctx_len=pcfg.ctx_len)
+        self.mesh = mesh
+        predict = make_predict_fn(params, pcfg, use_kernel=use_kernel)
+        step = make_sim_scan(predict, self.sim_cfg)
+
+        def run_chunk(state: SimState, xs):
+            state, _ = jax.lax.scan(step, state, xs)
+            return state
+
+        if mesh is not None:
+            st_sh = state_shardings(mesh)
+            xs_sh = chunk_shardings(mesh)
+            self._run_chunk = jax.jit(
+                run_chunk, in_shardings=(st_sh, xs_sh), out_shardings=st_sh,
+                donate_argnums=(0,),
+            )
+        else:
+            self._run_chunk = jax.jit(run_chunk, donate_argnums=(0,))
+
+    def lower(self, n_lanes: int, chunk: int):
+        """Dry-run lowering against ShapeDtypeStructs (no allocation)."""
+        state = jax.eval_shape(lambda: init_state(n_lanes, self.sim_cfg))
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        with ctx:
+            return self._run_chunk.lower(state, chunk_specs(n_lanes, chunk))
+
+    def simulate(self, trace_arrays: Dict[str, np.ndarray], n_lanes: int, chunk: int = 1024):
+        T = trace_arrays["feat"].shape[0]
+        per = max((T // n_lanes) // chunk, 1) * chunk
+        per = min(per, T // n_lanes)
+        T_used = per * n_lanes
+
+        def lanes_first(a):
+            return np.swapaxes(a[:T_used].reshape(n_lanes, per, *a.shape[1:]), 0, 1)
+
+        xs_np = {k: lanes_first(v) for k, v in trace_arrays.items()}
+        state = init_state(n_lanes, self.sim_cfg)
+        t0 = time.time()
+        for lo in range(0, per, chunk):
+            xs = {k: jnp.asarray(v[lo : lo + chunk]) for k, v in xs_np.items()}
+            state = self._run_chunk(state, xs)
+        total = state.cur_tick + drain_cycles(state)
+        total_cycles = float(jnp.sum(total))
+        jax.block_until_ready(total)
+        dt = time.time() - t0
+        return {
+            "total_cycles": total_cycles,
+            "cpi": total_cycles / T_used,
+            "n_instructions": T_used,
+            "throughput_ips": T_used / dt,
+            "seconds": dt,
+        }
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

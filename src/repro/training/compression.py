@@ -1,0 +1,82 @@
+"""Error-feedback gradient compression for cross-pod reduction.
+
+At 1000+-node scale the pod-to-pod (DCN/optical) links are the scarce
+resource; within-pod ICI reduces run at full precision while the cross-pod
+all-reduce runs int8 (or bf16) with error-feedback residuals so quantization
+noise is re-injected instead of lost (1-bit-Adam / EF-SGD lineage —
+convergence-neutral in expectation).
+
+Used by the train driver as a drop-in around the gradient tree:
+
+    comp = ErrorFeedbackCompressor(bits=8)
+    state = comp.init(grads)
+    grads_q, state = comp.compress(grads, state)   # before cross-pod psum
+    (psum over "pod" happens on the int8 payload under shard_map)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackCompressor:
+    bits: int = 8
+
+    def init(self, grads):
+        return jax.tree_util.tree_map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def _levels(self):
+        return float(2 ** (self.bits - 1) - 1)
+
+    def compress(self, grads, residual):
+        """Returns (payload {q:int8, scale}, new_residual)."""
+        levels = self._levels()
+
+        def comp(g, r):
+            x = g.astype(jnp.float32) + r
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / levels
+            q = jnp.clip(jnp.round(x / scale), -levels, levels).astype(jnp.int8)
+            deq = q.astype(jnp.float32) * scale
+            return (q, scale), x - deq
+
+        flat, treedef = jax.tree_util.tree_flatten(grads)
+        rflat = treedef.flatten_up_to(residual)
+        out = [comp(g, r) for g, r in zip(flat, rflat)]
+        payload = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_resid = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        return payload, new_resid
+
+    def decompress(self, payload):
+        def deq(qs):
+            q, scale = qs
+            return q.astype(jnp.float32) * scale
+
+        return jax.tree_util.tree_map(
+            deq, payload, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        )
+
+
+def cross_pod_mean(grads, axis_name: str = "pod", compressor: ErrorFeedbackCompressor = None, residual=None):
+    """Inside shard_map: mean-reduce grads across pods, optionally int8+EF.
+
+    Within-pod reduction is assumed already done (GSPMD full-precision);
+    this is only the scarce cross-pod hop.
+    """
+    if compressor is None:
+        return jax.tree_util.tree_map(lambda g: jax.lax.pmean(g, axis_name), grads), residual
+    payload, residual = compressor.compress(grads, residual)
+
+    def reduce_leaf(qs):
+        q, scale = qs
+        # psum the dequantized payload; scale is per-leaf so psum scales too
+        deq = q.astype(jnp.float32) * scale
+        return jax.lax.pmean(deq, axis_name)
+
+    reduced = jax.tree_util.tree_map(
+        reduce_leaf, payload, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+    )
+    return reduced, residual

@@ -1,0 +1,50 @@
+"""Losses: next-token cross-entropy (sharded-vocab safe) and the SimNet
+hybrid classification+regression loss (paper §2.3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_ce(logits, tokens, loss_mask=None):
+    """Shifted LM loss. logits: (B,S,V); tokens: (B,S) int32.
+
+    Stable CE in fp32; the label pick is a one-hot contraction (fuses under
+    XLA without materialising a gather on the sharded vocab dim).
+    """
+    V = logits.shape[-1]
+    lg = logits[:, :-1, :].astype(jnp.float32)
+    labels = tokens[:, 1:]
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, V, dtype=lg.dtype)
+    label_logit = jnp.sum(lg * onehot, axis=-1)
+    nll = lse - label_logit  # (B, S-1)
+    if loss_mask is not None:
+        w = loss_mask[:, 1:].astype(jnp.float32)
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.mean(nll)
+
+
+def hybrid_latency_loss(cls_logits, reg_out, targets, n_classes):
+    """SimNet hybrid head loss: CE over {0..n_classes-2, overflow} +
+    squared error on the regression output (paper trains both heads).
+
+    cls_logits: (..., n_classes); reg_out: (...,); targets: (...,) float.
+    """
+    t_int = jnp.clip(targets, 0, None).astype(jnp.int32)
+    overflow = t_int >= (n_classes - 1)
+    cls_target = jnp.where(overflow, n_classes - 1, t_int)
+    lg = cls_logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(cls_target, n_classes, dtype=lg.dtype)
+    ce = lse - jnp.sum(lg * onehot, axis=-1)
+    # regression on raw latency (fp32), trained everywhere but most useful
+    # for the overflow class
+    se = jnp.square(reg_out.astype(jnp.float32) - targets.astype(jnp.float32))
+    return jnp.mean(ce) + jnp.mean(se)
+
+
+def mse(pred, target):
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32)))

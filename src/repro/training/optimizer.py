@@ -1,0 +1,122 @@
+"""Pure-JAX optimizers: Adam(W) with global-norm clipping and schedules.
+
+Optimizer state mirrors the param tree (ZeRO-equivalent: sharded with the
+same PartitionSpecs as the params, so m/v never replicate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    warmup_steps: int = 0
+    decay_steps: int = 0  # 0 → constant after warmup
+    min_lr_ratio: float = 0.1
+
+
+def adam_init(params, keep_master: bool = False):
+    """``keep_master=True`` for bf16-stored params: fp32 master copies live
+    in the (ZeRO-sharded) optimizer state; gradients/gathers move bf16."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    state = {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if keep_master:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def adam_state_specs(param_specs, keep_master: bool = False):
+    """Optimizer-state ShardSpec tree mirroring the params."""
+    from repro.nn.init import ShardSpec
+
+    state = {
+        "m": param_specs,
+        "v": param_specs,
+        "step": ShardSpec(()),
+    }
+    if keep_master:
+        state["master"] = param_specs
+    return state
+
+
+def schedule_lr(cfg: AdamConfig, step):
+    step_f = step.astype(jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(step_f / cfg.warmup_steps, 1.0)
+        lr = lr * warm
+    if cfg.decay_steps > 0:
+        frac = jnp.clip((step_f - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cosine = 0.5 * (1.0 + jnp.cos(math.pi * frac))
+        lr = lr * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cosine)
+    return lr
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adam_update(grads, opt_state, params, cfg: AdamConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    if cfg.clip_norm > 0:
+        grads, grad_norm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        grad_norm = global_norm(grads)
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master=None):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        base = master if master is not None else p.astype(jnp.float32)
+        if cfg.weight_decay > 0:
+            delta = delta + cfg.weight_decay * base
+        new_master = base - lr * delta
+        return new_master.astype(p.dtype), m_new, v_new, new_master
+
+    has_master = "master" in opt_state
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_w = treedef.flatten_up_to(opt_state["master"]) if has_master else [None] * len(flat_p)
+    out = [upd(p, g, m, v, w) for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if has_master:
+        new_state["master"] = jax.tree_util.tree_unflatten(treedef, [o[3] for o in out])
+    metrics = {"grad_norm": grad_norm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the real single
+CPU device; only launch/dryrun.py forces 512 virtual devices."""
+import numpy as np
+import pytest
+
+from repro.des.o3 import O3Config, O3Simulator
+from repro.des.workloads import get_benchmark
+
+
+@pytest.fixture(scope="session")
+def small_o3():
+    return O3Config()
+
+
+@pytest.fixture(scope="session")
+def small_trace(small_o3):
+    """A 6k-instruction mixed trace through the DES (session-cached)."""
+    sim = O3Simulator(small_o3)
+    return sim.run(get_benchmark("mlb_mixed", 6000))
+
+
+@pytest.fixture(scope="session")
+def loop_trace(small_o3):
+    sim = O3Simulator(small_o3)
+    return sim.run(get_benchmark("sim_loop", 4000))

@@ -1,0 +1,75 @@
+"""Checkpoint manager: atomicity, keep-N, resharding restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager, _flatten, _unflatten
+
+
+def tree():
+    return {
+        "params": {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,))}},
+        "opt": {"step": jnp.asarray(7, jnp.int32), "m": (jnp.zeros(2), jnp.ones(3))},
+    }
+
+
+def test_flatten_roundtrip():
+    t = tree()
+    flat = _flatten(t)
+    t2 = _unflatten(flat)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(10, tree(), metadata={"note": "x"})
+    restored, step = mgr.restore()
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["params"]["a"]), np.arange(6.0).reshape(2, 3))
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_keep_n_prunes(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, {"x": jnp.asarray(float(s))})
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    for s in [1, 2, 3]:
+        mgr.save(s, {"x": jnp.asarray(float(s))})
+    restored, step = mgr.restore(step=2)
+    assert step == 2 and float(restored["x"]) == 2.0
+
+
+def test_resharding_restore(tmp_path):
+    """Save unsharded, restore with explicit shardings (elastic path)."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, tree())
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = NamedSharding(mesh, P())
+    shardings = {
+        "params": {"a": sh, "b": {"c": sh}},
+        "opt": {"step": sh, "m": (sh, sh)},
+    }
+    restored, _ = mgr.restore(shardings=shardings)
+    assert restored["params"]["a"].sharding == sh
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(5, tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """Tmp dirs must never be listed as checkpoints (atomicity)."""
+    mgr = CheckpointManager(tmp_path)
+    (tmp_path / ".tmp_step_99").mkdir()
+    assert mgr.all_steps() == []

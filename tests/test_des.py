@@ -1,0 +1,123 @@
+"""Reference-DES component and behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.des.branch import BiMode, Bimodal, TageLite
+from repro.des.cache import Cache, CacheHierarchy, TwoLevelTLB
+from repro.des.history import history_features
+from repro.des.isa import Op
+from repro.des.o3 import A64FX_CONFIG, O3Config, O3Simulator
+from repro.des.workloads import ALL_BENCHMARKS, get_benchmark
+
+
+class TestCache:
+    def test_hit_after_fill(self):
+        c = Cache(1024, 2, 64)
+        hit, _ = c.access(0x1000)
+        assert not hit
+        hit, _ = c.access(0x1000)
+        assert hit
+        hit, _ = c.access(0x1004)  # same line
+        assert hit
+
+    def test_lru_eviction(self):
+        c = Cache(2 * 64, 2, 64)  # 1 set, 2 ways
+        c.access(0 * 64)
+        c.access(1 * 64)
+        c.access(0 * 64)  # refresh way 0
+        c.access(2 * 64)  # evicts line 1 (LRU)
+        hit, _ = c.access(0 * 64)
+        assert hit
+        hit, _ = c.access(1 * 64)
+        assert not hit
+
+    def test_writeback_on_dirty_eviction(self):
+        c = Cache(2 * 64, 2, 64)
+        c.access(0 * 64, write=True)
+        c.access(1 * 64)
+        _, wb1 = c.access(2 * 64)  # evicts dirty line 0
+        assert wb1
+
+    def test_tlb_walk_levels(self):
+        tlb = TwoLevelTLB()
+        lvl, walks = tlb.access(0x10000)
+        assert lvl == 3 and walks.shape == (3,)
+        lvl, _ = tlb.access(0x10008)  # same page: L1 TLB hit
+        assert lvl == 1
+
+
+class TestBranch:
+    @pytest.mark.parametrize("cls", [Bimodal, BiMode, TageLite])
+    def test_learns_bias(self, cls):
+        bp = cls()
+        pc = 0x4000
+        for _ in range(50):
+            bp.update(pc, True)
+        assert bp.predict(pc) is True
+        for _ in range(50):
+            bp.update(pc, False)
+        assert bp.predict(pc) is False
+
+    def test_tage_learns_pattern(self):
+        bp = TageLite()
+        pc = 0x4000
+        pattern = [True, True, False]
+        correct = 0
+        for i in range(300):
+            t = pattern[i % 3]
+            if i > 150:
+                correct += bp.predict(pc) == t
+            bp.update(pc, t)
+        assert correct / 149 > 0.8  # history-based predictor learns period-3
+
+
+class TestO3:
+    def test_fetch_cycles_monotonic(self, small_trace):
+        assert (small_trace.fetch_lat >= 0).all()
+        assert (small_trace.exec_lat >= 1).all()
+
+    def test_store_latency_only_stores(self, small_trace):
+        stores = small_trace.op == int(Op.STORE)
+        assert (small_trace.store_lat[stores] > 0).all()
+        assert (small_trace.store_lat[~stores] == 0).all()
+        # memory write completes after execution completes
+        assert (small_trace.store_lat[stores] >= small_trace.exec_lat[stores]).all()
+
+    def test_cpi_spread_across_workloads(self, small_o3):
+        sim = O3Simulator(small_o3)
+        cpis = {}
+        for name in ["mlb_compute", "sim_chase"]:
+            cpis[name] = sim.run(get_benchmark(name, 5000)).cpi
+        # pointer chasing must be dramatically slower than compute loops
+        assert cpis["sim_chase"] > 5 * cpis["mlb_compute"]
+
+    def test_a64fx_config_differs(self):
+        t1 = O3Simulator(O3Config()).run(get_benchmark("mlb_mixed", 5000))
+        t2 = O3Simulator(A64FX_CONFIG).run(get_benchmark("mlb_mixed", 5000))
+        assert t1.total_cycles != t2.total_cycles
+
+    def test_bigger_l2_not_slower(self, small_o3):
+        prog = get_benchmark("sim_chase_small", 8000)
+        small = O3Simulator(O3Config(caches=dict(l2_size=256 * 1024))).run(prog)
+        big = O3Simulator(O3Config(caches=dict(l2_size=4 * 1024 * 1024))).run(prog)
+        assert big.total_cycles <= small.total_cycles
+
+    def test_history_features_match_des(self, small_o3):
+        """The lightweight history sim must reproduce the DES's history
+        features exactly (same component models, same access stream)."""
+        prog = get_benchmark("mlb_mixed", 3000)
+        tr = O3Simulator(small_o3).run(prog)
+        h = history_features(prog)
+        np.testing.assert_array_equal(h["fetch_level"], tr.fetch_level)
+        np.testing.assert_array_equal(h["data_level"], tr.data_level)
+        np.testing.assert_array_equal(h["mispred"], tr.mispred)
+
+
+class TestWorkloads:
+    @pytest.mark.parametrize("name", sorted(ALL_BENCHMARKS))
+    def test_generates(self, name):
+        p = get_benchmark(name, 2000)
+        assert p.n == 2000
+        assert p.op.min() >= 0 and p.op.max() < 13
+        mem = np.isin(p.op, [int(Op.LOAD), int(Op.STORE)])
+        assert (p.addr[mem] > 0).all()

@@ -1,0 +1,66 @@
+"""End-to-end: DES → teacher-forced dataset → train tiny C3 → simulate.
+The full-scale version lives in benchmarks/pipeline.py; this is the
+assert-able small replica."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.dataset import build_dataset, dedup, teacher_forced_samples
+from repro.core.predictor import PredictorConfig
+from repro.core.simulator import SimConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_data(small_trace_module):
+    return build_dataset([small_trace_module], SimConfig(ctx_len=32), n_lanes=4)
+
+
+@pytest.fixture(scope="module")
+def small_trace_module():
+    from repro.des.o3 import O3Config, O3Simulator
+    from repro.des.workloads import get_benchmark
+
+    return O3Simulator(O3Config()).run(get_benchmark("mlb_mixed", 8000))
+
+
+def test_teacher_samples_shapes(small_trace_module):
+    X, Y = teacher_forced_samples(small_trace_module, SimConfig(ctx_len=32), n_lanes=4)
+    assert X.shape[1:] == (33, 50)
+    assert Y.shape == (X.shape[0], 3)
+    assert X.dtype == np.float16
+
+
+def test_dedup_removes_duplicates():
+    X = np.zeros((10, 4, 50), np.float16)
+    X[5:] = 1.0
+    Y = np.zeros((10, 3), np.float32)
+    X2, Y2 = dedup(X, Y)
+    assert len(X2) == 2
+
+
+def test_training_improves_val_loss(tiny_data):
+    pcfg = PredictorConfig(kind="c1", ctx_len=32)
+    params, hist = api.train_predictor(tiny_data, pcfg, epochs=3, batch_size=256)
+    assert hist["val_loss"][-1] < hist["val_loss"][0]
+
+
+def test_trained_model_beats_trivial_baseline(tiny_data, small_trace_module):
+    """The learned simulator must predict CPI better than assuming the
+    benchmark's mean fetch latency is 1 (the 'ideal pipeline' baseline)."""
+    pcfg = PredictorConfig(kind="c3", ctx_len=32)
+    params, _ = api.train_predictor(tiny_data, pcfg, epochs=8, batch_size=256)
+    res = api.simulate(small_trace_module, params, pcfg, n_lanes=4)
+    trivial_err = abs(1.0 - res["des_cpi"]) / res["des_cpi"]
+    # few-epoch budget on a tiny trace: the meaningful property is beating
+    # the ideal-pipeline baseline; full-budget accuracy lives in benchmarks
+    assert res["cpi_error"] < trivial_err
+    assert res["cpi_error"] < 0.8
+
+
+def test_prediction_error_metric(tiny_data):
+    pcfg = PredictorConfig(kind="c1", ctx_len=32)
+    params, _ = api.train_predictor(tiny_data, pcfg, epochs=1, batch_size=256)
+    errs = api.prediction_errors(params, pcfg, tiny_data["test_x"][:512], tiny_data["test_y"][:512])
+    assert set(errs) == {"fetch", "execution", "store"}
+    assert all(np.isfinite(v) for v in errs.values())

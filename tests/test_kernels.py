@@ -1,0 +1,103 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against ref.py oracles
+(interpret mode — the kernel body itself executes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+class TestConv2s:
+    @pytest.mark.parametrize("B", [1, 7, 64, 130])
+    @pytest.mark.parametrize("N,C,Co", [(8, 16, 32), (112, 50, 64), (56, 64, 128)])
+    def test_shapes(self, B, N, C, Co):
+        k = jax.random.split(jax.random.PRNGKey(B * N + C), 3)
+        x = jax.random.normal(k[0], (B, N, C))
+        w = jax.random.normal(k[1], (2 * C, Co)) * 0.1
+        b = jax.random.normal(k[2], (Co,)) * 0.1
+        out = ops.conv2s({"w": w, "b": b}, x)
+        expect = ref.conv2s_ref(x, w, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        k = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jax.random.normal(k[0], (16, 32, 24), dtype)
+        w = (jax.random.normal(k[1], (48, 32)) * 0.1).astype(dtype)
+        b = jnp.zeros((32,), dtype)
+        out = ops.conv2s({"w": w, "b": b}, x)
+        expect = ref.conv2s_ref(x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-2, atol=2e-2)
+
+
+class TestCnnTrunk:
+    @pytest.mark.parametrize("B", [3, 64, 100])
+    @pytest.mark.parametrize("N", [16, 72, 112])
+    def test_fused_equals_chain(self, B, N):
+        chans = [50, 64, 128, 128]
+        ks = jax.random.split(jax.random.PRNGKey(B + N), 7)
+        x = jax.random.normal(ks[0], (B, N, chans[0]))
+        layers, lp = [], []
+        for i in range(3):
+            w = jax.random.normal(ks[1 + i], (2 * chans[i], chans[i + 1])) * 0.1
+            b = jax.random.normal(ks[4 + i], (chans[i + 1],)) * 0.05
+            layers.append((w, b))
+            lp.append({"w": w, "b": b})
+        out = ops.cnn_trunk(lp, x)
+        expect = ref.cnn_trunk_ref(layers, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+class TestDecodeAttn:
+    @pytest.mark.parametrize("B,H,KV,hd,S", [
+        (1, 4, 4, 16, 64),     # MHA
+        (2, 8, 2, 32, 300),    # GQA, unaligned S
+        (3, 10, 1, 64, 1024),  # MQA (recurrentgemma-style)
+    ])
+    def test_vs_oracle(self, B, H, KV, hd, S):
+        ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+        q = jax.random.normal(ks[0], (B, H, hd))
+        k = jax.random.normal(ks[1], (B, S, KV, hd))
+        v = jax.random.normal(ks[2], (B, S, KV, hd))
+        for cache_len in [1, S // 2, S]:
+            out = ops.decode_attn(q, k, v, jnp.asarray(cache_len), block_s=128)
+            expect = ref.decode_attn_ref(q, k, v, jnp.asarray(cache_len))
+            np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+    def test_window_masking(self):
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        B, H, KV, hd, S = 2, 4, 2, 16, 256
+        q = jax.random.normal(ks[0], (B, H, hd))
+        k = jax.random.normal(ks[1], (B, S, KV, hd))
+        v = jax.random.normal(ks[2], (B, S, KV, hd))
+        out = ops.decode_attn(q, k, v, jnp.asarray(200), window=64, block_s=64)
+        expect = ref.decode_attn_ref(q, k, v, jnp.asarray(200), window=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+    def test_bf16_cache(self):
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        B, H, KV, hd, S = 2, 4, 4, 32, 128
+        q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.bfloat16)
+        out = ops.decode_attn(q, k, v, jnp.asarray(S))
+        expect = ref.decode_attn_ref(q, k, v, jnp.asarray(S))
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect), rtol=3e-2, atol=3e-2
+        )
+
+    def test_matches_model_attention_path(self):
+        """Kernel result == the model's jnp decode_attention (bit of glue)."""
+        from repro.nn.attention import KVCache, decode_attention
+
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        B, H, KV, hd, S = 2, 8, 4, 32, 192
+        q = jax.random.normal(ks[0], (B, H, hd))
+        cache = KVCache(
+            jax.random.normal(ks[1], (B, S, KV, hd)),
+            jax.random.normal(ks[2], (B, S, KV, hd)),
+        )
+        plain = decode_attention(q, cache, jnp.asarray(150), dtype=jnp.float32)
+        kern = decode_attention(q, cache, jnp.asarray(150), dtype=jnp.float32, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(plain), np.asarray(kern), rtol=2e-4, atol=2e-4)

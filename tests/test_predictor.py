@@ -1,0 +1,90 @@
+"""Predictor zoo: shapes, gradients, hybrid decode semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.predictor import (
+    PredictorConfig,
+    apply_raw,
+    decode_latency,
+    inference_mflops,
+    init_predictor,
+    make_predict_fn,
+    split_heads,
+)
+
+KINDS = ["fc2", "fc3", "c1", "c3", "rb7", "lstm2", "tx6"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_shapes_and_grads(kind):
+    cfg = PredictorConfig(kind=kind, ctx_len=16)
+    params, specs = init_predictor(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.seq_in, 50))
+    raw = apply_raw(params, x, cfg)
+    assert raw.shape == (4, cfg.out_dim)
+    assert not bool(jnp.isnan(raw).any())
+
+    def loss(p):
+        return jnp.sum(jnp.square(apply_raw(p, x, cfg)))
+
+    g = jax.grad(loss)(params)
+    norms = [float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(g)]
+    assert sum(norms) > 0  # gradient reaches the parameters
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_mflops_positive_and_ordered(kind):
+    c = inference_mflops(PredictorConfig(kind=kind, ctx_len=64))
+    assert c > 0
+
+
+def test_cnn_cheaper_than_sequence_models():
+    """Paper Table 4's qualitative ordering: C3 ≪ LSTM2 < TX6."""
+    c3 = inference_mflops(PredictorConfig(kind="c3", ctx_len=64))
+    lstm = inference_mflops(PredictorConfig(kind="lstm2", ctx_len=64))
+    tx = inference_mflops(PredictorConfig(kind="tx6", ctx_len=64))
+    assert c3 < lstm < tx
+
+
+def test_hybrid_decode_semantics():
+    from repro.core.predictor import REG_SCALE
+
+    cfg = PredictorConfig(kind="c3", ctx_len=4, n_classes=10)
+    B = 2
+    raw = np.zeros((B, cfg.out_dim), np.float32)
+    r = raw.reshape(B, 3, 11)
+    # head 0: class 3 wins → latency 3 regardless of regression
+    r[0, 0, 3] = 10.0
+    r[0, 0, 10] = 77.7  # regression slot
+    # head 1: overflow class wins → regression value (REG_SCALE space)
+    r[0, 1, 9] = 10.0
+    r[0, 1, 10] = 42.3 * REG_SCALE
+    out = decode_latency(jnp.asarray(raw), cfg)
+    assert float(out[0, 0]) == 3.0
+    assert float(out[0, 1]) == pytest.approx(42.3, abs=1e-3)
+    # negative regression clamps to n_classes-1 on overflow
+    r2 = np.zeros((B, 3, 11), np.float32)
+    r2[0, 2, 9] = 5.0
+    r2[0, 2, 10] = -3.0
+    out2 = decode_latency(jnp.asarray(r2.reshape(B, -1)), cfg)
+    assert float(out2[0, 2]) == 9.0
+
+
+def test_regression_mode():
+    cfg = PredictorConfig(kind="c1", ctx_len=4, output="reg")
+    params, _ = init_predictor(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, cfg.seq_in, 50))
+    out = decode_latency(apply_raw(params, x, cfg), cfg)
+    assert out.shape == (3, 3)
+    assert (np.asarray(out) >= 0).all()  # relu'd
+
+
+def test_predict_fn_with_kernel_matches_plain():
+    cfg = PredictorConfig(kind="c3", ctx_len=16)
+    params, _ = init_predictor(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, cfg.seq_in, 50))
+    plain = make_predict_fn(params, cfg, use_kernel=False)(x)
+    fused = make_predict_fn(params, cfg, use_kernel=True)(x)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(fused), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,185 @@
+"""Runtime substrate: sharding rules, HLO analyzer, straggler, elastic,
+gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config, list_archs
+from repro.launch.specs import param_shapes_and_specs
+from repro.models.registry import build_model
+from repro.nn.init import ShardSpec
+from repro.runtime import elastic, hlo as hlo_lib
+from repro.runtime.sharding import rules_for, to_pspec
+from repro.runtime.straggler import StragglerMonitor
+from repro.training.compression import ErrorFeedbackCompressor
+
+
+MESH_AXES_1POD = ("data", "model")
+MESH_AXES_2POD = ("pod", "data", "model")
+
+
+class TestShardingRules:
+    def test_pod_axis_filtered_on_single_pod(self):
+        cfg = get_config("tinyllama-1.1b")
+        rules = rules_for(cfg, "train")
+        spec = to_pspec(("batch", None), rules, MESH_AXES_1POD)
+        assert spec == P("data")
+        spec = to_pspec(("batch", None), rules, MESH_AXES_2POD)
+        assert spec == P(("pod", "data"))
+
+    def test_moe_ep_vs_tp(self):
+        mixtral = get_config("mixtral-8x7b")  # TP mode (8 experts < 16)
+        phi = get_config("phi3.5-moe-42b-a6.6b")  # EP mode
+        r_tp = rules_for(mixtral, "train")
+        r_ep = rules_for(phi, "train")
+        assert to_pspec(("expert", "embed", "mlp"), r_tp, MESH_AXES_1POD) == P(None, "data", "model")
+        assert to_pspec(("expert", "embed", "mlp"), r_ep, MESH_AXES_1POD) == P("model", "data")
+
+    @pytest.mark.parametrize("arch", list_archs())
+    @pytest.mark.parametrize("mode", ["train", "decode", "decode_long"])
+    def test_no_duplicate_mesh_axes_any_arch(self, arch, mode):
+        """Every param spec must be a VALID PartitionSpec (no axis reuse) and
+        every sharded dim of the full config must divide the mesh axis."""
+        cfg = get_config(arch)
+        rules = rules_for(cfg, mode)
+        model = build_model(cfg)
+        shapes, specs = param_shapes_and_specs(model)
+        flat_shapes = jax.tree_util.tree_leaves(shapes)
+        flat_specs = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, ShardSpec)
+        )
+        sizes = {"pod": 2, "data": 16, "model": 16}
+        for shape, spec in zip(flat_shapes, flat_specs):
+            ps = to_pspec(spec.axes, rules, MESH_AXES_2POD)
+            used = []
+            for entry in ps:
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                used += list(axes)
+            assert len(used) == len(set(used)), (arch, shape.shape, ps)
+            # divisibility of sharded dims
+            for dim, entry in zip(shape.shape, tuple(ps) + (None,) * 9):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                n = int(np.prod([sizes[a] for a in axes]))
+                assert dim % n == 0, (arch, mode, shape.shape, ps)
+
+
+class TestHloAnalyzer:
+    def test_scan_trip_count_flops(self):
+        def f(w, x):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), None
+            c, _ = jax.lax.scan(body, x, w)
+            return c.sum()
+
+        comp = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((5, 64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((8, 64), jnp.float32),
+        ).compile()
+        res = hlo_lib.analyze(comp.as_text())
+        assert res["flops"] == pytest.approx(5 * 2 * 8 * 64 * 64, rel=0.01)
+
+    def test_nested_scan_multiplies(self):
+        def f(w, x):
+            def outer(c, _):
+                def inner(ci, wi):
+                    return jnp.tanh(ci @ wi), None
+                ci, _ = jax.lax.scan(inner, c, w)
+                return ci, None
+            c, _ = jax.lax.scan(outer, x, None, length=3)
+            return c.sum()
+
+        comp = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((4, 32, 32), jnp.float32),
+            jax.ShapeDtypeStruct((8, 32), jnp.float32),
+        ).compile()
+        res = hlo_lib.analyze(comp.as_text())
+        assert res["flops"] == pytest.approx(3 * 4 * 2 * 8 * 32 * 32, rel=0.01)
+
+    def test_dus_bytes_not_full_buffer(self):
+        """In-place scan accumulation must not count the whole carried
+        buffer as traffic every iteration."""
+        def f(x):
+            def body(buf, i):
+                return jax.lax.dynamic_update_slice(buf, x[None] * 1.0, (i, 0)), None
+            buf, _ = jax.lax.scan(body, jnp.zeros((1000, 64)), jnp.arange(4))
+            return buf.sum()
+
+        comp = jax.jit(f).lower(jax.ShapeDtypeStruct((64,), jnp.float32)).compile()
+        res = hlo_lib.analyze(comp.as_text())
+        # full-buffer double counting would be ≥ 4 × 2 × 1000 × 64 × 4 = 2 MB
+        assert res["bytes_accessed"] < 1.5e6
+
+
+class TestStraggler:
+    def test_flags_slow_step(self):
+        m = StragglerMonitor()
+        for i in range(20):
+            m.record(i, 1.0)
+        actions = m.record(20, 5.0)
+        assert actions["slow_step"]
+
+    def test_exclusion_after_patience(self):
+        m = StragglerMonitor()
+        excluded = []
+        for i in range(10):
+            a = m.record(i, 1.0, host_times={0: 1.0, 1: 1.0, 2: 5.0})
+            excluded = a["exclude_hosts"]
+        assert 2 in excluded
+
+    def test_recovered_host_not_excluded(self):
+        m = StragglerMonitor()
+        for i in range(3):
+            m.record(i, 1.0, host_times={0: 1.0, 1: 5.0})
+        for i in range(10):
+            a = m.record(3 + i, 1.0, host_times={0: 1.0, 1: 1.0})
+        assert a["exclude_hosts"] == []
+
+
+class TestElastic:
+    def test_multipod_plan(self):
+        p = elastic.choose_mesh(512, model_axis=16, pod_size=256)
+        assert p.shape == (2, 16, 16) and p.axes == ("pod", "data", "model")
+
+    def test_degraded_to_single_pod(self):
+        p = elastic.choose_mesh(511, model_axis=16, pod_size=256)
+        assert p.axes == ("data", "model") and p.n_devices <= 511
+
+    def test_replan_after_failure(self):
+        p0 = elastic.choose_mesh(512, model_axis=16, pod_size=256)
+        p1 = elastic.replan_after_failure(p0, 256, model_axis=16)
+        assert p1.n_devices == 256
+
+    def test_tiny_world(self):
+        p = elastic.choose_mesh(1, model_axis=16)
+        assert p.n_devices == 1
+
+
+class TestCompression:
+    def test_error_feedback_reduces_bias(self):
+        comp = ErrorFeedbackCompressor(bits=8)
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=256), jnp.float32)}
+        resid = comp.init(g)
+        total_plain = jnp.zeros(256)
+        total_comp = jnp.zeros(256)
+        for _ in range(50):
+            payload, resid = comp.compress(g, resid)
+            total_comp = total_comp + comp.decompress(payload)["w"]
+            total_plain = total_plain + g["w"]
+        # with error feedback, the accumulated quantized stream tracks the
+        # true sum to fine precision
+        rel = float(jnp.abs(total_comp - total_plain).max() / jnp.abs(total_plain).max())
+        assert rel < 0.01
+
+    def test_quantization_range(self):
+        comp = ErrorFeedbackCompressor(bits=8)
+        g = {"w": jnp.asarray([1000.0, -1000.0, 0.5])}
+        payload, _ = comp.compress(g, comp.init(g))
+        q, scale = payload["w"]
+        assert q.dtype == jnp.int8
+        assert int(jnp.abs(q).max()) <= 127

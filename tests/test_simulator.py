@@ -1,0 +1,116 @@
+"""SimNet instruction-centric simulator: correctness invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core.simulator import (
+    SimConfig,
+    _suffix_any,
+    _suffix_count,
+    build_model_input,
+    drain_cycles,
+    init_state,
+    sim_step,
+    simulate_trace,
+)
+
+
+def test_teacher_forced_matches_eq1_exactly(small_trace):
+    """THE core invariant: with ground-truth latencies, the simulator's
+    clock equals the trace's Eq. 1 time (ΣF + drain) exactly."""
+    arrs = F.trace_arrays(small_trace)
+    res = simulate_trace(arrs, None, SimConfig(ctx_len=64), n_lanes=1)
+    assert float(res["total_cycles"]) == small_trace.total_cycles
+
+
+def test_parallel_lanes_close_to_sequential(small_trace):
+    arrs = F.trace_arrays(small_trace)
+    cfg = SimConfig(ctx_len=64)
+    seq = float(simulate_trace(arrs, None, cfg, n_lanes=1)["total_cycles"])
+    par = float(simulate_trace(arrs, None, cfg, n_lanes=4)["total_cycles"])
+    assert abs(par - seq) / seq < 0.1
+
+
+def test_model_input_layout(small_trace):
+    arrs = F.trace_arrays(small_trace)
+    cfg = SimConfig(ctx_len=8)
+    state = init_state(1, cfg)
+    cur_feat = jnp.asarray(arrs["feat"][:1])
+    cur_addr = jnp.asarray(arrs["addr"][:1])
+    x = build_model_input(state, cur_feat, cur_addr)
+    assert x.shape == (1, 9, 50)
+    assert float(x[0, 0, F.IDX_VALID]) == 1.0  # current row valid
+    assert float(x[0, 1:, F.IDX_VALID].sum()) == 0.0  # empty context
+
+    # push one instruction, next input must contain it as context slot 0
+    lats = jnp.asarray([[2.0, 5.0, 0.0]])
+    cur = {"feat": cur_feat, "addr": cur_addr, "is_store": jnp.asarray([False])}
+    state = sim_step(state, cur, lats, cfg)
+    x2 = build_model_input(state, cur_feat, cur_addr)
+    assert float(x2[0, 1, F.IDX_VALID]) == 1.0
+    assert float(x2[0, 1, F.IDX_EXEC]) == pytest.approx(5.0 * F.LAT_SCALE)
+    # same pc → dependency flags fire
+    assert float(x2[0, 1, F.IDX_DEP]) == 1.0
+
+
+def test_retirement_in_order():
+    """A ready-younger entry must NOT retire past an unready-older one."""
+    cfg = SimConfig(ctx_len=4, retire_width=8)
+    state = init_state(1, cfg)
+    feat = jnp.zeros((1, F.STATIC_END))
+    addr = jnp.zeros((1, F.N_ADDR_KEYS), jnp.int32)
+    cur = {"feat": feat, "addr": addr, "is_store": jnp.asarray([False])}
+    # older instruction: huge exec latency; younger: tiny
+    state = sim_step(state, cur, jnp.asarray([[0.0, 100.0, 0.0]]), cfg)
+    state = sim_step(state, cur, jnp.asarray([[0.0, 1.0, 0.0]]), cfg)
+    # advance clock a lot: fetch latency 50
+    state = sim_step(state, cur, jnp.asarray([[50.0, 1.0, 0.0]]), cfg)
+    # slot 1 = younger (exec 1, resid 50 → ready), slot 2 = older (exec 100, not ready)
+    assert bool(state.valid[0, 1]) and bool(state.valid[0, 2])
+
+
+def test_store_moves_to_memory_write_queue():
+    cfg = SimConfig(ctx_len=4, retire_width=8)
+    state = init_state(1, cfg)
+    feat = np.zeros((1, F.STATIC_END), np.float32)
+    feat[0, 7] = 1.0  # Op.STORE one-hot
+    addr = jnp.zeros((1, F.N_ADDR_KEYS), jnp.int32)
+    cur = {"feat": jnp.asarray(feat), "addr": addr, "is_store": jnp.asarray([True])}
+    state = sim_step(state, cur, jnp.asarray([[0.0, 2.0, 20.0]]), cfg)
+    ncur = {"feat": jnp.zeros((1, F.STATIC_END)), "addr": addr, "is_store": jnp.asarray([False])}
+    # advance 5 cycles: store's exec (2) done → retires to MW queue, stays valid
+    state = sim_step(state, ncur, jnp.asarray([[5.0, 1.0, 0.0]]), cfg)
+    assert bool(state.valid[0, 1]) and bool(state.in_mw[0, 1])
+    # advance 30 cycles: store write (20) done → leaves
+    state = sim_step(state, ncur, jnp.asarray([[30.0, 1.0, 0.0]]), cfg)
+    assert not bool(state.valid[0, 2])
+
+
+def test_drain_accounts_remaining_work():
+    cfg = SimConfig(ctx_len=4)
+    state = init_state(1, cfg)
+    feat = jnp.zeros((1, F.STATIC_END))
+    addr = jnp.zeros((1, F.N_ADDR_KEYS), jnp.int32)
+    cur = {"feat": feat, "addr": addr, "is_store": jnp.asarray([False])}
+    state = sim_step(state, cur, jnp.asarray([[3.0, 40.0, 0.0]]), cfg)
+    d = drain_cycles(state)
+    assert float(d[0]) == 40.0  # resid 0, needs all 40 cycles
+
+
+def test_suffix_helpers():
+    x = jnp.asarray([[True, False, True, False]])
+    np.testing.assert_array_equal(np.asarray(_suffix_any(x))[0], [True, True, False, False])
+    np.testing.assert_array_equal(np.asarray(_suffix_count(x))[0], [1, 1, 0, 0])
+
+
+def test_overflow_counted():
+    cfg = SimConfig(ctx_len=2)
+    state = init_state(1, cfg)
+    feat = jnp.zeros((1, F.STATIC_END))
+    addr = jnp.zeros((1, F.N_ADDR_KEYS), jnp.int32)
+    cur = {"feat": feat, "addr": addr, "is_store": jnp.asarray([False])}
+    for _ in range(4):  # capacity 2, everything in-flight (fetch 0, exec big)
+        state = sim_step(state, cur, jnp.asarray([[0.0, 1000.0, 0.0]]), cfg)
+    assert int(state.overflow[0]) >= 1

@@ -1,0 +1,117 @@
+"""System-level behaviour tests: deliverable surfaces exist and cohere.
+
+(The heavyweight end-to-end paths live in test_e2e.py, test_models_smoke.py
+and the dry-run test; this file checks the composed public surfaces.)
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_all_archs_registered():
+    from repro.configs.registry import list_archs
+
+    assert sorted(list_archs()) == [
+        "gemma3-4b", "mixtral-8x7b", "phi3.5-moe-42b-a6.6b", "qwen2-vl-72b",
+        "qwen3-32b", "qwen3-4b", "recurrentgemma-2b", "rwkv6-1.6b",
+        "tinyllama-1.1b", "whisper-large-v3",
+    ]
+
+
+def test_shape_cells_cover_assignment():
+    from repro.configs.registry import list_archs
+    from repro.configs.shapes import SHAPES, shape_applicable
+
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    cells = [(a, s) for a in list_archs() for s in SHAPES]
+    assert len(cells) == 40
+    skipped = [c for c in cells if not shape_applicable(*c)]
+    assert len(skipped) == 6  # pure full-attention archs skip long_500k
+
+
+def test_exact_assigned_geometries():
+    """Spot-check the configs against the assignment table."""
+    from repro.configs.registry import get_config
+
+    g = get_config("gemma3-4b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff, g.vocab) == (
+        34, 2560, 8, 4, 10240, 262144)
+    assert g.local_global_ratio == 5
+    q = get_config("qwen3-32b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff, q.vocab) == (
+        64, 5120, 64, 8, 25600, 151936)
+    m = get_config("mixtral-8x7b")
+    assert (m.n_experts, m.top_k, m.attn_pattern) == (8, 2, "swa")
+    p = get_config("phi3.5-moe-42b-a6.6b")
+    assert (p.n_experts, p.top_k, p.moe_ep) == (16, 2, True)
+    r = get_config("recurrentgemma-2b")
+    assert (r.n_layers, r.rec_pattern, r.n_kv_heads) == (26, 2, 1)
+    w = get_config("whisper-large-v3")
+    assert (w.n_enc_layers, w.n_layers, w.vocab) == (32, 32, 51866)
+
+
+def test_param_counts_near_nameplate():
+    """n_params() must land near the arch's nameplate size."""
+    from repro.configs.registry import get_config
+
+    expect = {
+        "tinyllama-1.1b": 1.1e9, "qwen3-32b": 32e9, "mixtral-8x7b": 46e9,
+        "qwen2-vl-72b": 72e9, "rwkv6-1.6b": 1.6e9,
+    }
+    for arch, n in expect.items():
+        got = get_config(arch).n_params()
+        assert 0.55 * n < got < 1.6 * n, (arch, got, n)
+
+
+def test_mesh_factory_matches_spec():
+    import inspect
+
+    import repro.launch.mesh as mesh_mod
+
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '("pod", "data", "model")' in src
+
+
+def test_dryrun_module_sets_device_flag_first():
+    src = (REPO / "src/repro/launch/dryrun.py").read_text().splitlines()
+    assert src[0] == "import os"
+    head = "\n".join(src[:4])
+    assert "xla_force_host_platform_device_count=512" in head
+    assert "import jax" not in head  # device count is locked before any jax import
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_subprocess():
+    """Full dry-run of one real cell in a subprocess (512 virtual devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "tinyllama-1.1b", "--shape", "decode_32k",
+         "--out", "/tmp/dryrun_test"],
+        env=env, capture_output=True, text=True, timeout=560, cwd=str(REPO),
+    )
+    assert "done; 0 failures" in res.stdout, res.stdout[-2000:] + res.stderr[-2000:]
+    rec = json.loads(Path("/tmp/dryrun_test/tinyllama-1.1b__decode_32k__pod.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["dominant"] in ("memory", "compute", "collective")
+
+
+def test_dryrun_artifacts_complete_if_present():
+    """If the full sweep has been run, all 80 LM cells must be ok/SKIP."""
+    art = REPO / "artifacts/dryrun"
+    if not art.exists():
+        pytest.skip("sweep not run in this environment")
+    recs = [json.loads(p.read_text()) for p in art.glob("*__*.json")]
+    lm = [r for r in recs if not r["arch"].startswith("simnet")]
+    assert len(lm) >= 80
+    bad = [r for r in lm if not (str(r["status"]) == "ok" or str(r["status"]).startswith("SKIP"))]
+    assert bad == [], [(r["arch"], r["shape"], r["status"]) for r in bad]
