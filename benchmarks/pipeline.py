@@ -10,6 +10,7 @@ Artifacts (artifacts/simnet/):
   fig56_cpi.json           per-benchmark CPIs + phase curves (Figs. 5, 6)
   fig7_subtrace.json       parallel-lane error vs sub-trace size (Fig. 7)
   fig89_throughput.json    throughput vs lanes + DES baseline (Figs. 8, 9)
+  packed_throughput.json   batched multi-workload engine: packed vs sequential
   table5_usecases.json     design-space relative accuracy (Table 5 / §5)
   a64fx.json               second-processor-config accuracy (§4.1)
 """
@@ -170,13 +171,14 @@ def step_fig56(data, quick):
     if _exists("fig56_cpi.json"):
         return
     out = {"benchmarks": {}, "phase_curves": {}}
+    eval_traces = data["ml_eval"] + data["sim_traces"]
     for mid in ["c3_hybrid", "rb7_hybrid"]:
         saved = load_model(mid)
-        for tr in data["ml_eval"] + data["sim_traces"]:
-            res = api.simulate(tr, saved["params"], saved["pcfg"], n_lanes=8)
-            out["benchmarks"].setdefault(tr.name, {})[mid] = {
-                "cpi": float(res["cpi"]), "des_cpi": float(res["des_cpi"]),
-                "err": float(res["cpi_error"]),
+        # all evaluation benchmarks packed into ONE scan (batched engine)
+        many = api.simulate_many(eval_traces, saved["params"], saved["pcfg"], n_lanes=8)
+        for w in many["workloads"]:
+            out["benchmarks"].setdefault(w["name"], {})[mid] = {
+                "cpi": w["cpi"], "des_cpi": w["des_cpi"], "err": w["cpi_error"],
             }
         # phase curves on the phased benchmark
         tr = [t for t in data["sim_traces"] if "phased" in t.name][0]
@@ -193,13 +195,26 @@ def step_fig7(data, quick):
     tr = data["ml_eval"][0]
     lanes_sweep = [1, 2, 4, 8, 16, 32] if not quick else [1, 4, 16]
     out = {"trace": tr.name, "n_instructions": int(tr.n), "points": []}
+    # pack the sweep, but group lane counts with similar per-lane lengths:
+    # the packed time axis is max(T//lanes) over the group, so letting the
+    # 1-lane job share a scan with the 32-lane job would run 32 mostly-
+    # inactive lanes for T steps (≈10x wasted inference)
+    groups, cur = [], []
     for lanes in lanes_sweep:
-        res = api.simulate(tr, saved["params"], saved["pcfg"], n_lanes=lanes)
-        out["points"].append({
-            "lanes": lanes, "subtrace_len": int(tr.n // lanes),
-            "cpi_error": float(res["cpi_error"]),
-        })
-        print(f"[pipeline] fig7 lanes={lanes}: err={out['points'][-1]['cpi_error']:.4f}", flush=True)
+        if cur and (tr.n // cur[0]) > 2 * (tr.n // lanes):
+            groups.append(cur)
+            cur = []
+        cur.append(lanes)
+    groups.append(cur)
+    for g in groups:
+        many = api.simulate_many([tr] * len(g), saved["params"], saved["pcfg"],
+                                 n_lanes=g)
+        for lanes, w in zip(g, many["workloads"]):
+            out["points"].append({
+                "lanes": lanes, "subtrace_len": int(tr.n // lanes),
+                "cpi_error": w["cpi_error"],
+            })
+            print(f"[pipeline] fig7 lanes={lanes}: err={w['cpi_error']:.4f}", flush=True)
     _save_json("fig7_subtrace.json", out)
 
 
@@ -233,29 +248,73 @@ def step_table5(data, quick):
     out = {"branch_predictor": {}, "l2_size": {}}
 
     # --- branch predictor study: baseline bimodal vs bimode vs tage ---
+    # every (design point × benchmark) cell packs into one batched call
     for bp in ["bimodal", "bimode", "tage"]:
-        des_cycles, sim_cycles = {}, {}
-        for name in bench_names:
-            prog = get_benchmark(name, n)
-            tr = O3Simulator(O3Config(bpred=bp)).run(prog)
-            des_cycles[name] = tr.total_cycles
-            res = api.simulate(tr, saved["params"], pcfg, n_lanes=8)
-            sim_cycles[name] = res["total_cycles"]
-        out["branch_predictor"][bp] = {"des": des_cycles, "simnet": sim_cycles}
+        traces = [O3Simulator(O3Config(bpred=bp)).run(get_benchmark(name, n))
+                  for name in bench_names]
+        many = api.simulate_many(traces, saved["params"], pcfg, n_lanes=8)
+        out["branch_predictor"][bp] = {
+            "des": {name: tr.total_cycles for name, tr in zip(bench_names, traces)},
+            "simnet": {name: w["total_cycles"]
+                       for name, w in zip(bench_names, many["workloads"])},
+        }
         print(f"[pipeline] table5 bpred={bp} done", flush=True)
 
     # --- L2 size exploration ---
+    l2_names = ["sim_chase_small", "mlb_stream"]
     for l2 in [256 * 1024, 1024 * 1024, 4 * 1024 * 1024]:
-        des_cycles, sim_cycles = {}, {}
-        for name in ["sim_chase_small", "mlb_stream"]:
-            prog = get_benchmark(name, n)
-            tr = O3Simulator(O3Config(caches=dict(l2_size=l2))).run(prog)
-            des_cycles[name] = tr.total_cycles
-            res = api.simulate(tr, saved["params"], pcfg, n_lanes=8)
-            sim_cycles[name] = res["total_cycles"]
-        out["l2_size"][str(l2)] = {"des": des_cycles, "simnet": sim_cycles}
+        traces = [O3Simulator(O3Config(caches=dict(l2_size=l2))).run(get_benchmark(name, n))
+                  for name in l2_names]
+        many = api.simulate_many(traces, saved["params"], pcfg, n_lanes=8)
+        out["l2_size"][str(l2)] = {
+            "des": {name: tr.total_cycles for name, tr in zip(l2_names, traces)},
+            "simnet": {name: w["total_cycles"]
+                       for name, w in zip(l2_names, many["workloads"])},
+        }
         print(f"[pipeline] table5 l2={l2} done", flush=True)
     _save_json("table5_usecases.json", out)
+
+
+def step_throughput(data, quick):
+    """Packed vs sequential execution of the same workload set (the batched
+    multi-workload engine's headline number: instructions/sec both ways)."""
+    if _exists("packed_throughput.json"):
+        return
+    saved = load_model("c3_hybrid")
+    traces = (data["ml_eval"] + data["sim_traces"])[: 6 if quick else 12]
+    lanes = 8
+    # sequential: one compile+dispatch cycle per workload — the pre-packing
+    # pipeline behaviour (and the serialization the motivation calls out)
+    t0 = time.time()
+    seq = [api.simulate(tr, saved["params"], saved["pcfg"], n_lanes=lanes)
+           for tr in traces]
+    seq_run = sum(r["seconds"] for r in seq)  # compiled-call time only
+    # api.simulate executes each compiled scan twice (warmup + timed run);
+    # subtract the timed re-runs so the baseline is an honest single pass
+    # (compile + one execution per workload), same shape as the packed side
+    seq_wall = (time.time() - t0) - seq_run
+    n_seq = sum(r["n_instructions"] for r in seq)
+    many = api.simulate_many(traces, saved["params"], saved["pcfg"],
+                             n_lanes=lanes, timeit=True)
+    out = {
+        "n_workloads": len(traces),
+        "lanes_per_workload": lanes,
+        "sequential": {"ips": n_seq / seq_run, "seconds": seq_run,
+                       "wall_seconds": seq_wall,  # per-call compiles + 1 run each
+                       "n_instructions": n_seq},
+        "packed": {"ips": many["throughput_ips"], "seconds": many["seconds"],
+                   "wall_seconds": many["first_call_seconds"],  # one compile+run
+                   "n_instructions": many["total_instructions"]},
+        # headline: whole-sweep wall clock, packed vs one-call-per-workload
+        "speedup_wall": seq_wall / many["first_call_seconds"],
+        # steady state: compiled call vs compiled call
+        "speedup_steady": many["throughput_ips"] / (n_seq / seq_run),
+    }
+    print(f"[pipeline] throughput: sequential {out['sequential']['ips']:.0f} IPS, "
+          f"packed {out['packed']['ips']:.0f} IPS "
+          f"({out['speedup_wall']:.2f}x wall, {out['speedup_steady']:.2f}x steady)",
+          flush=True)
+    _save_json("packed_throughput.json", out)
 
 
 def step_a64fx(quick):
@@ -299,7 +358,8 @@ def main():
         np.savez(dset_path, **data["dataset"])
     print(f"[pipeline] dataset {data['dataset']['train_x'].shape} {time.time()-t0:.0f}s", flush=True)
     train_zoo(data, args.quick, skip_missing=args.eval_only)
-    steps = args.steps.split(",") if args.steps != "all" else ["table4", "fig56", "fig7", "fig89", "table5", "a64fx"]
+    steps = args.steps.split(",") if args.steps != "all" else [
+        "table4", "fig56", "fig7", "fig89", "throughput", "table5", "a64fx"]
     models = None
     if "table4" in steps:
         step_table4(data, models, args.quick)
@@ -309,6 +369,8 @@ def main():
         step_fig7(data, args.quick)
     if "fig89" in steps:
         step_fig89(data, args.quick)
+    if "throughput" in steps:
+        step_throughput(data, args.quick)
     if "table5" in steps:
         step_table5(data, args.quick)
     if "a64fx" in steps:

@@ -9,6 +9,7 @@ Sections:
   fig5_6     per-benchmark CPIs + phase-level accuracy
   fig7       parallel-simulation error vs sub-trace size
   fig8_9_10  simulation throughput, device scaling + training amortization
+  throughput batched multi-workload engine: packed vs sequential instr/s
   table5     design-space relative accuracy (branch predictors, L2 size)
   a64fx      second processor configuration (paper §4.1)
   roofline   dry-run roofline summary (full tables: python -m benchmarks.roofline)
@@ -119,6 +120,24 @@ def fig8_9_10():
               f"(zero-collective design — paper §3.3 claim verified in compiled HLO)")
 
 
+def throughput():
+    data = _load("packed_throughput.json")
+    _sec("Batched multi-workload engine — packed vs sequential throughput")
+    if data is None:
+        print("(artifacts missing — run `python -m benchmarks.pipeline`)")
+        return
+    seq, packed = data["sequential"], data["packed"]
+    print(f"  workloads: {data['n_workloads']} × {data['lanes_per_workload']} lanes each")
+    print(f"  sequential (one jitted call per workload): {seq['ips']:12.0f} instr/s "
+          f"({seq['n_instructions']} instrs, {seq['wall_seconds']:.2f}s wall: W compiles + W runs)")
+    print(f"  packed     (all workloads in one scan):    {packed['ips']:12.0f} instr/s "
+          f"({packed['n_instructions']} instrs, {packed['wall_seconds']:.2f}s wall: 1 compile + 1 run)")
+    print(f"  whole-sweep wall-clock speedup: {data['speedup_wall']:.2f}x "
+          f"(steady-state, compiled vs compiled: {data['speedup_steady']:.2f}x)")
+    CSV_ROWS.append(("throughput/sequential", 1e6 / seq["ips"], None))
+    CSV_ROWS.append(("throughput/packed", 1e6 / packed["ips"], data["speedup_wall"]))
+
+
 def table5():
     data = _load("table5_usecases.json")
     _sec("Table 5 / §5 — design-space exploration relative accuracy")
@@ -187,6 +206,7 @@ def main() -> None:
     fig5_6()
     fig7()
     fig8_9_10()
+    throughput()
     table5()
     a64fx()
     roofline_summary()

@@ -9,12 +9,20 @@ force) the three latencies, advance the clock, retire in order, push.
 Lanes are the paper's sub-traces: `vmap` over lanes batches the predictor
 inference exactly like the paper's GPU batching; under `pjit` the lane axis
 shards over ("pod","data") with zero steady-state communication.
+
+Multi-workload packing (one level up from the paper): lanes from *many*
+workloads × SimConfigs share one scan. Each lane carries a workload id, a
+per-lane retire width / context capacity (so heterogeneous SimConfigs pack
+together), and a per-step validity mask for ragged trace lengths — a lane
+whose sub-trace has ended freezes in place, so packed per-lane results are
+bit-identical to running each workload alone. Per-workload totals come out
+of one `segment_sum` over the lane axis.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -106,9 +114,34 @@ def _suffix_count(x):
     return rev_cs - x.astype(jnp.int32)
 
 
-def sim_step(state: SimState, cur, lats, cfg: SimConfig) -> SimState:
+def _lane_where(active, new, old):
+    """Per-lane select: keep `old` where the lane is inactive this step."""
+    a = active.reshape(active.shape + (1,) * (new.ndim - 1))
+    return jnp.where(a, new, old)
+
+
+def sim_step(
+    state: SimState,
+    cur,
+    lats,
+    cfg: SimConfig,
+    *,
+    active: Optional[jax.Array] = None,
+    retire_width: Optional[jax.Array] = None,
+    lane_ctx: Optional[jax.Array] = None,
+) -> SimState:
     """Advance one instruction. cur: dict(feat (L,41), addr (L,5),
-    is_store (L,)); lats: (L, 3) predicted/true (fetch, exec, store)."""
+    is_store (L,)); lats: (L, 3) predicted/true (fetch, exec, store).
+
+    Optional per-lane controls (packed multi-workload mode):
+      active (L,) bool — lanes with False keep their state unchanged (ragged
+        trace lengths: a finished lane freezes, its drain stays exact).
+      retire_width (L,) i32 — per-lane processor retire bandwidth, overriding
+        the scalar ``cfg.retire_width`` (heterogeneous SimConfigs in one pack).
+      lane_ctx (L,) i32 — per-lane in-flight capacity ≤ cfg.ctx_len; entries
+        pushed past it are force-dropped and counted in ``overflow`` exactly
+        as a standalone run with that smaller ctx_len would.
+    """
     fetch, exec_lat, store_lat = lats[:, 0], lats[:, 1], lats[:, 2]
     fetch = jnp.clip(jnp.round(fetch), 0, cfg.max_latency)
     exec_lat = jnp.clip(jnp.round(exec_lat), 1, cfg.max_latency)
@@ -121,7 +154,8 @@ def sim_step(state: SimState, cur, lats, cfg: SimConfig) -> SimState:
     resid = state.resid + jnp.where(state.valid, fetch[:, None], 0.0)
 
     # --- processor-queue retirement: in-order, bandwidth-limited ---
-    budget = (cfg.retire_width * jnp.maximum(fetch, 1.0)).astype(jnp.int32)  # (L,)
+    rw = jnp.asarray(cfg.retire_width, jnp.float32) if retire_width is None else retire_width.astype(jnp.float32)
+    budget = (rw * jnp.maximum(fetch, 1.0)).astype(jnp.int32)  # (L,)
     proc = state.valid & ~state.in_mw
     ready_p = proc & (resid >= state.exec_lat)
     blocked = proc & ~ready_p
@@ -142,22 +176,41 @@ def sim_step(state: SimState, cur, lats, cfg: SimConfig) -> SimState:
     in_mw = in_mw & valid
 
     # --- push current instruction at slot 0 (roll the buffer) ---
-    overflow = state.overflow + valid[:, -1].astype(jnp.int32)
+    Q = state.valid.shape[1]
+    if lane_ctx is None:
+        overflow = state.overflow + valid[:, -1].astype(jnp.int32)
+    else:
+        # entry at the lane's own capacity boundary is force-dropped on push
+        idx = jnp.clip(lane_ctx - 1, 0, Q - 1)
+        at_cap = jnp.take_along_axis(valid, idx[:, None], axis=1)[:, 0]
+        overflow = state.overflow + at_cap.astype(jnp.int32)
 
     def push(buf, new):
         return jnp.concatenate([new[:, None].astype(buf.dtype), buf[:, :-1]], axis=1)
 
-    return SimState(
+    valid_new = push(valid, jnp.ones_like(fetch, dtype=bool))
+    in_mw_new = push(in_mw, jnp.zeros_like(fetch, dtype=bool))
+    if lane_ctx is not None:
+        keep = jnp.arange(Q)[None, :] < lane_ctx[:, None]
+        valid_new = valid_new & keep
+        in_mw_new = in_mw_new & keep
+
+    new_state = SimState(
         feat=push(state.feat, cur["feat"]),
         addr=push(state.addr, cur["addr"]),
         resid=push(resid, jnp.zeros_like(fetch)),
         exec_lat=push(state.exec_lat, exec_lat),
         store_lat=push(state.store_lat, store_lat),
-        valid=push(valid, jnp.ones_like(fetch, dtype=bool)),
-        in_mw=push(in_mw, jnp.zeros_like(fetch, dtype=bool)),
+        valid=valid_new,
+        in_mw=in_mw_new,
         cur_tick=cur_tick,
         overflow=overflow,
     )
+    if active is None:
+        return new_state
+    return SimState(*[
+        _lane_where(active, n, o) for n, o in zip(new_state, state)
+    ])
 
 
 def drain_cycles(state: SimState) -> jax.Array:
@@ -167,24 +220,38 @@ def drain_cycles(state: SimState) -> jax.Array:
     return jnp.max(jnp.maximum(need, 0.0), axis=-1)
 
 
-def make_sim_scan(predict_fn: Optional[Callable], cfg: SimConfig):
+def make_sim_scan(
+    predict_fn: Optional[Callable],
+    cfg: SimConfig,
+    *,
+    retire_width: Optional[jax.Array] = None,
+    lane_ctx: Optional[jax.Array] = None,
+    emit_outputs: bool = True,
+):
     """Returns scan_fn(state, trace_chunk) -> (state, per-step outputs).
 
-    trace_chunk: dict of (T, L, ...) arrays (feat, addr, is_store, labels).
+    trace_chunk: dict of (T, L, ...) arrays (feat, addr, is_store, labels),
+    plus an optional per-step "active" (T, L) bool lane mask (packed mode).
     predict_fn: (L, 1+Q, 50) -> (L, 3) latencies. None = teacher forcing
     (dataset-builder mode: emits the assembled model inputs instead).
+    retire_width / lane_ctx: per-lane SimConfig overrides (see sim_step).
+    emit_outputs=False scans with empty per-step outputs — the packed
+    multi-workload path uses this so memory stays O(state), not O(T).
     """
 
     def step(state, xs):
         cur = {"feat": xs["feat"], "addr": xs["addr"], "is_store": xs["is_store"]}
-        x = build_model_input(state, cur["feat"], cur["addr"])
         if predict_fn is None:
             lats = xs["labels"]
-            out = {"x": x}
+            out = {"x": build_model_input(state, cur["feat"], cur["addr"])} if emit_outputs else {}
         else:
+            x = build_model_input(state, cur["feat"], cur["addr"])
             lats = predict_fn(x)  # sim_step zeroes store latency for non-stores
-            out = {"lats": lats}
-        new_state = sim_step(state, cur, lats, cfg)
+            out = {"lats": lats} if emit_outputs else {}
+        new_state = sim_step(
+            state, cur, lats, cfg,
+            active=xs.get("active"), retire_width=retire_width, lane_ctx=lane_ctx,
+        )
         return new_state, out
 
     return step
@@ -214,4 +281,170 @@ def simulate_trace(trace_arrays: dict, predict_fn, cfg: SimConfig, n_lanes: int)
         "overflow": jnp.sum(state.overflow),
         "outs": outs,
         "n_instructions": T_used,
+    }
+
+
+# ---------------------------------------------------------------------------
+# packed multi-workload simulation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedWorkloads:
+    """Lanes from many (workload, SimConfig) jobs packed on one lane axis.
+
+    ``xs`` is time-major numpy: feat (T, L, 41), addr (T, L, 5), is_store
+    (T, L), labels (T, L, 3), active (T, L) bool. Rows past a lane's own
+    sub-trace length are zero-filled and inactive (ragged-length masking).
+    """
+
+    xs: dict
+    workload_id: np.ndarray  # (L,) i32 — lane → job index
+    retire_width: np.ndarray  # (L,) i32 per-lane retire bandwidth
+    lane_ctx: np.ndarray  # (L,) i32 per-lane in-flight capacity
+    lane_steps: np.ndarray  # (L,) i64 real (unpadded) steps per lane
+    n_instructions: np.ndarray  # (W,) i64 packed instructions per job
+    cfg: SimConfig  # unified config (ctx_len = max over jobs)
+    uniform: bool  # True when every job shares retire_width/ctx_len
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.workload_id.shape[0])
+
+    @property
+    def n_workloads(self) -> int:
+        return int(self.n_instructions.shape[0])
+
+    @property
+    def n_steps(self) -> int:
+        return int(self.xs["feat"].shape[0])
+
+
+def pack_workloads(
+    trace_arrays_list: Sequence[dict],
+    n_lanes: Union[int, Sequence[int]] = 8,
+    cfg: Union[SimConfig, Sequence[SimConfig], None] = None,
+    pad_to: int = 1,
+) -> PackedWorkloads:
+    """Pack W workloads (each a `trace_arrays` dict) into one lane batch.
+
+    n_lanes / cfg may be per-workload sequences; the packed scan runs with
+    ctx_len = max over jobs, and per-lane retire_width / lane_ctx replay
+    each job's own SimConfig exactly. ``pad_to`` rounds the time axis up
+    (with inactive steps) so chunked streaming never needs a ragged tail.
+    """
+    W = len(trace_arrays_list)
+    if W == 0:
+        raise ValueError("pack_workloads needs at least one workload")
+    lanes = [n_lanes] * W if isinstance(n_lanes, int) else list(n_lanes)
+    if len(lanes) != W:
+        raise ValueError(f"n_lanes has {len(lanes)} entries for {W} workloads")
+    if cfg is None:
+        cfgs = [SimConfig()] * W
+    elif isinstance(cfg, SimConfig):
+        cfgs = [cfg] * W
+    else:
+        cfgs = list(cfg)
+    if len(cfgs) != W:
+        raise ValueError(f"cfg has {len(cfgs)} entries for {W} workloads")
+    # ctx_len and retire_width are replayed per lane; every other SimConfig
+    # field is shared scan state and must agree or exactness would silently
+    # break (e.g. a per-job max_latency would clip with the wrong bound)
+    base = cfgs[0]
+    for c in cfgs[1:]:
+        if dataclasses.replace(c, ctx_len=base.ctx_len, retire_width=base.retire_width) != base:
+            raise ValueError(
+                "pack_workloads replays only ctx_len/retire_width per workload; "
+                f"other SimConfig fields must match across jobs ({c} vs {base})"
+            )
+
+    per = []
+    for arrs, ln in zip(trace_arrays_list, lanes):
+        T = arrs["feat"].shape[0]
+        if T < ln:
+            raise ValueError(f"workload of {T} instructions cannot fill {ln} lanes")
+        per.append(T // ln)
+    T_max = max(per)
+    T_max = ((T_max + pad_to - 1) // pad_to) * pad_to
+    L = sum(lanes)
+    Q = max(c.ctx_len for c in cfgs)
+    ucfg = dataclasses.replace(cfgs[0], ctx_len=Q)
+
+    xs = {
+        "feat": np.zeros((T_max, L, F.STATIC_END), np.float32),
+        "addr": np.zeros((T_max, L, F.N_ADDR_KEYS), np.int32),
+        "is_store": np.zeros((T_max, L), bool),
+        "labels": np.zeros((T_max, L, 3), np.float32),
+        "active": np.zeros((T_max, L), bool),
+    }
+    workload_id = np.zeros(L, np.int32)
+    retire_width = np.zeros(L, np.int32)
+    lane_ctx = np.zeros(L, np.int32)
+    lane_steps = np.zeros(L, np.int64)
+    n_instructions = np.zeros(W, np.int64)
+
+    lo = 0
+    for w, (arrs, ln, c, p) in enumerate(zip(trace_arrays_list, lanes, cfgs, per)):
+        hi = lo + ln
+        used = p * ln
+        for k in ("feat", "addr", "is_store", "labels"):
+            a = np.asarray(arrs[k])[:used]
+            xs[k][:p, lo:hi] = np.swapaxes(a.reshape(ln, p, *a.shape[1:]), 0, 1)
+        xs["active"][:p, lo:hi] = True
+        workload_id[lo:hi] = w
+        retire_width[lo:hi] = c.retire_width
+        lane_ctx[lo:hi] = c.ctx_len
+        lane_steps[lo:hi] = p
+        n_instructions[w] = used
+        lo = hi
+
+    uniform = all(
+        c.retire_width == cfgs[0].retire_width and c.ctx_len == Q for c in cfgs
+    )
+    return PackedWorkloads(
+        xs=xs, workload_id=workload_id, retire_width=retire_width,
+        lane_ctx=lane_ctx, lane_steps=lane_steps,
+        n_instructions=n_instructions, cfg=ucfg, uniform=uniform,
+    )
+
+
+def workload_totals(state: SimState, packed: PackedWorkloads):
+    """Per-workload (cycles, overflow) via segment_sum over the lane axis."""
+    lane_total = state.cur_tick + drain_cycles(state)
+    wid = jnp.asarray(packed.workload_id)
+    W = packed.n_workloads
+    cycles = jax.ops.segment_sum(lane_total, wid, num_segments=W)
+    overflow = jax.ops.segment_sum(state.overflow, wid, num_segments=W)
+    return lane_total, cycles, overflow
+
+
+def simulate_many(
+    trace_arrays_list: Sequence[dict],
+    predict_fn: Optional[Callable],
+    cfg: Union[SimConfig, Sequence[SimConfig], None] = None,
+    n_lanes: Union[int, Sequence[int]] = 8,
+) -> dict:
+    """Batched multi-workload simulation: one scan over all packed lanes.
+
+    Teacher-forced (predict_fn=None) per-workload totals are bit-identical
+    to W separate `simulate_trace` calls with each job's own SimConfig.
+    """
+    packed = pack_workloads(trace_arrays_list, n_lanes, cfg)
+    rw = None if packed.uniform else jnp.asarray(packed.retire_width)
+    lc = None if packed.uniform else jnp.asarray(packed.lane_ctx)
+    step = make_sim_scan(
+        predict_fn, packed.cfg, retire_width=rw, lane_ctx=lc, emit_outputs=False
+    )
+    xs = {k: jnp.asarray(v) for k, v in packed.xs.items()}
+    state = init_state(packed.n_lanes, packed.cfg)
+    state, _ = jax.lax.scan(step, state, xs)
+    lane_total, cycles, overflow = workload_totals(state, packed)
+    return {
+        "lane_cycles": lane_total,
+        "workload_cycles": cycles,
+        "workload_overflow": overflow,
+        "total_cycles": jnp.sum(cycles),
+        "n_instructions": packed.n_instructions,
+        "workload_id": packed.workload_id,
+        "n_lanes": packed.n_lanes,
+        "n_steps": packed.n_steps,
     }

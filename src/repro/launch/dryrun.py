@@ -175,7 +175,12 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, overrides=None):
         compiled = lowered.compile()
     compile_s = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    # cost_analysis() returns a dict on some backends/jax versions and a
+    # one-element list of dicts on others — normalize both shapes
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = cost or {}
     try:
         ma = compiled.memory_analysis()
         mem = {

@@ -6,13 +6,20 @@ simulation — context management, inference, clock — is ONE jitted scan, so
 multi-device scaling has the paper's "no inter-device communication"
 property: the only collective is the final lane-cycle reduction.
 
+The lane axis is multi-workload: ``simulate_many`` packs lanes from many
+workloads × SimConfigs into one sharded scan (per-lane workload ids,
+validity masks for ragged trace lengths, per-lane retire width / context
+capacity) and streams arbitrarily long traces through chunked jitted calls
+with donated state buffers. ``simulate`` is the single-workload special
+case of the same path.
+
 ``input_specs()`` / ``lower()`` make the engine dry-runnable on the
 production mesh alongside the LM pool (simnet-c3 / simnet-rb7 arch cells).
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +28,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import features as F
 from repro.core.predictor import PredictorConfig, make_predict_fn
-from repro.core.simulator import SimConfig, SimState, drain_cycles, init_state, make_sim_scan
+from repro.core.simulator import (
+    PackedWorkloads,
+    SimConfig,
+    SimState,
+    drain_cycles,
+    init_state,
+    make_sim_scan,
+    pack_workloads,
+    workload_totals,
+)
 
 
 def _lane_axes(mesh):
@@ -35,28 +51,33 @@ def lane_sharding(mesh):
 
 def state_shardings(mesh):
     lanes = lane_sharding(mesh)
-
-    def shard(x):
-        return lanes  # every SimState leaf is lane-major
-
     return SimState(*[lanes for _ in SimState._fields])
 
 
 def chunk_specs(n_lanes: int, chunk: int):
-    """ShapeDtypeStructs for one scan chunk of trace input."""
+    """ShapeDtypeStructs for one scan chunk of packed trace input."""
     return {
         "feat": jax.ShapeDtypeStruct((chunk, n_lanes, F.STATIC_END), jnp.float32),
         "addr": jax.ShapeDtypeStruct((chunk, n_lanes, F.N_ADDR_KEYS), jnp.int32),
         "is_store": jax.ShapeDtypeStruct((chunk, n_lanes), jnp.bool_),
         "labels": jax.ShapeDtypeStruct((chunk, n_lanes, 3), jnp.float32),
+        "active": jax.ShapeDtypeStruct((chunk, n_lanes), jnp.bool_),
     }
+
+
+def lane_param_specs(n_lanes: int):
+    """ShapeDtypeStructs for the per-lane SimConfig arrays."""
+    return (
+        jax.ShapeDtypeStruct((n_lanes,), jnp.int32),  # retire_width
+        jax.ShapeDtypeStruct((n_lanes,), jnp.int32),  # lane_ctx
+    )
 
 
 def chunk_shardings(mesh):
     lanes_axes = _lane_axes(mesh)
     spec = P(None, lanes_axes if len(lanes_axes) > 1 else lanes_axes[0])
     s = NamedSharding(mesh, spec)
-    return {"feat": s, "addr": s, "is_store": s, "labels": s}
+    return {"feat": s, "addr": s, "is_store": s, "labels": s, "active": s}
 
 
 class SimNetEngine:
@@ -67,17 +88,23 @@ class SimNetEngine:
         self.sim_cfg = sim_cfg or SimConfig(ctx_len=pcfg.ctx_len)
         self.mesh = mesh
         predict = make_predict_fn(params, pcfg, use_kernel=use_kernel)
-        step = make_sim_scan(predict, self.sim_cfg)
 
-        def run_chunk(state: SimState, xs):
+        def run_chunk(state: SimState, xs, retire_width, lane_ctx):
+            step = make_sim_scan(
+                predict, self.sim_cfg,
+                retire_width=retire_width, lane_ctx=lane_ctx, emit_outputs=False,
+            )
             state, _ = jax.lax.scan(step, state, xs)
             return state
 
         if mesh is not None:
             st_sh = state_shardings(mesh)
             xs_sh = chunk_shardings(mesh)
+            lane_sh = lane_sharding(mesh)
             self._run_chunk = jax.jit(
-                run_chunk, in_shardings=(st_sh, xs_sh), out_shardings=st_sh,
+                run_chunk,
+                in_shardings=(st_sh, xs_sh, lane_sh, lane_sh),
+                out_shardings=st_sh,
                 donate_argnums=(0,),
             )
         else:
@@ -86,35 +113,69 @@ class SimNetEngine:
     def lower(self, n_lanes: int, chunk: int):
         """Dry-run lowering against ShapeDtypeStructs (no allocation)."""
         state = jax.eval_shape(lambda: init_state(n_lanes, self.sim_cfg))
+        rw, lc = lane_param_specs(n_lanes)
         ctx = self.mesh if self.mesh is not None else _nullcontext()
         with ctx:
-            return self._run_chunk.lower(state, chunk_specs(n_lanes, chunk))
+            return self._run_chunk.lower(state, chunk_specs(n_lanes, chunk), rw, lc)
+
+    # -- packed multi-workload path ------------------------------------
+
+    def simulate_many(
+        self,
+        trace_arrays_list: Sequence[Dict[str, np.ndarray]],
+        n_lanes: Union[int, Sequence[int]] = 8,
+        chunk: int = 1024,
+        cfgs: Union[SimConfig, Sequence[SimConfig], None] = None,
+    ) -> dict:
+        """Simulate many workloads in one packed lane batch, streaming the
+        time axis through chunked jitted calls with donated state buffers."""
+        packed = pack_workloads(
+            trace_arrays_list, n_lanes, cfgs if cfgs is not None else self.sim_cfg,
+            pad_to=chunk,
+        )
+        if packed.cfg.ctx_len > self.sim_cfg.ctx_len:
+            raise ValueError(
+                f"packed ctx_len {packed.cfg.ctx_len} exceeds engine ctx_len "
+                f"{self.sim_cfg.ctx_len} (the predictor input width is fixed)"
+            )
+        rw = jnp.asarray(packed.retire_width)
+        lc = jnp.asarray(packed.lane_ctx)
+        state = init_state(packed.n_lanes, self.sim_cfg)
+        t0 = time.time()
+        for lo in range(0, packed.n_steps, chunk):
+            xs = {k: jnp.asarray(v[lo : lo + chunk]) for k, v in packed.xs.items()}
+            state = self._run_chunk(state, xs, rw, lc)
+        lane_total, cycles, overflow = workload_totals(state, packed)
+        jax.block_until_ready(cycles)
+        dt = time.time() - t0
+        cycles = np.asarray(cycles, np.float64)
+        n_instr = packed.n_instructions
+        total_instr = int(n_instr.sum())
+        return {
+            "workload_cycles": cycles,
+            "workload_cpi": cycles / np.maximum(n_instr, 1),
+            "workload_overflow": np.asarray(overflow),
+            "n_instructions": n_instr,
+            "total_cycles": float(cycles.sum()),
+            "total_instructions": total_instr,
+            "n_lanes": packed.n_lanes,
+            "n_workloads": packed.n_workloads,
+            "throughput_ips": total_instr / dt,
+            "seconds": dt,
+        }
+
+    # -- single-workload convenience (same packed scan underneath) -----
 
     def simulate(self, trace_arrays: Dict[str, np.ndarray], n_lanes: int, chunk: int = 1024):
-        T = trace_arrays["feat"].shape[0]
-        per = max((T // n_lanes) // chunk, 1) * chunk
-        per = min(per, T // n_lanes)
-        T_used = per * n_lanes
-
-        def lanes_first(a):
-            return np.swapaxes(a[:T_used].reshape(n_lanes, per, *a.shape[1:]), 0, 1)
-
-        xs_np = {k: lanes_first(v) for k, v in trace_arrays.items()}
-        state = init_state(n_lanes, self.sim_cfg)
-        t0 = time.time()
-        for lo in range(0, per, chunk):
-            xs = {k: jnp.asarray(v[lo : lo + chunk]) for k, v in xs_np.items()}
-            state = self._run_chunk(state, xs)
-        total = state.cur_tick + drain_cycles(state)
-        total_cycles = float(jnp.sum(total))
-        jax.block_until_ready(total)
-        dt = time.time() - t0
+        res = self.simulate_many([trace_arrays], n_lanes=n_lanes, chunk=chunk)
+        n = int(res["n_instructions"][0])
         return {
-            "total_cycles": total_cycles,
-            "cpi": total_cycles / T_used,
-            "n_instructions": T_used,
-            "throughput_ips": T_used / dt,
-            "seconds": dt,
+            "total_cycles": float(res["workload_cycles"][0]),
+            "cpi": float(res["workload_cpi"][0]),
+            "n_instructions": n,
+            "throughput_ips": res["throughput_ips"],
+            "seconds": res["seconds"],
+            "overflow": int(res["workload_overflow"][0]),
         }
 
 

@@ -6,6 +6,10 @@ import numpy as np
 import pytest
 
 from repro.core import api
+
+# DES trace + teacher-forced dataset scan + multi-epoch training: the
+# scan-heavy end-to-end replica, excluded from the fast tier-1 profile
+pytestmark = pytest.mark.slow
 from repro.core.dataset import build_dataset, dedup, teacher_forced_samples
 from repro.core.predictor import PredictorConfig
 from repro.core.simulator import SimConfig

@@ -1,0 +1,50 @@
+"""Differential golden tests: teacher-forced JAX simulator vs the
+event-driven DES reference (`des/o3.py`) across distinct workload styles.
+
+With ground-truth latencies the learned simulator's queue machinery must
+reproduce the DES's Eq. 1 timing — totals and per-lane sub-trace cycles.
+"""
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core.simulator import SimConfig, simulate_trace
+from repro.des.o3 import O3Config, O3Simulator
+from repro.des.workloads import get_benchmark
+
+# ≥3 workload styles spanning the behavioural spectrum (stream / loop+store
+# pressure / hard-to-predict branches)
+GOLDEN_STYLES = ["mlb_stream", "sim_loop", "sim_branchy_hard"]
+
+
+@pytest.fixture(scope="module", params=GOLDEN_STYLES)
+def golden_trace(request):
+    sim = O3Simulator(O3Config())
+    return sim.run(get_benchmark(request.param, 3000))
+
+
+def test_total_cycles_match_des(golden_trace):
+    """Single-lane teacher-forced run == DES Eq. 1 total, exactly."""
+    arrs = F.trace_arrays(golden_trace)
+    res = simulate_trace(arrs, None, SimConfig(ctx_len=64), n_lanes=1)
+    assert float(res["total_cycles"]) == golden_trace.total_cycles
+
+
+def test_per_lane_cycles_match_des_segments(golden_trace):
+    """Each parallel lane simulates one contiguous sub-trace; its cycle
+    count must agree with the DES labels' Eq. 1 time for that segment."""
+    n_lanes = 4
+    arrs = F.trace_arrays(golden_trace)
+    res = simulate_trace(arrs, None, SimConfig(ctx_len=64), n_lanes=n_lanes)
+    lane_cycles = np.asarray(res["lane_cycles"])
+    per = golden_trace.n // n_lanes
+    for k in range(n_lanes):
+        seg = golden_trace.slice(k * per, (k + 1) * per)
+        assert lane_cycles[k] == pytest.approx(seg.total_cycles, rel=1e-9), (
+            f"lane {k} of {golden_trace.name}"
+        )
+
+
+def test_cpi_positive_and_finite(golden_trace):
+    assert np.isfinite(golden_trace.cpi)
+    assert golden_trace.cpi >= 1.0 / 8.0  # can't beat the retire width

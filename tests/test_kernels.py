@@ -8,9 +8,18 @@ import pytest
 from repro.kernels import ops, ref
 
 
+# fast tier keeps one representative cell per kernel grid (each cell pays
+# a fresh ~0.5-1s jit compile); the full grids run in the slow profile
+def _grid(params, fast):
+    return [p if p in fast else pytest.param(*p, marks=pytest.mark.slow)
+            for p in params]
+
+
 class TestConv2s:
-    @pytest.mark.parametrize("B", [1, 7, 64, 130])
-    @pytest.mark.parametrize("N,C,Co", [(8, 16, 32), (112, 50, 64), (56, 64, 128)])
+    @pytest.mark.parametrize("B", [1, pytest.param(7, marks=pytest.mark.slow),
+                                   64, pytest.param(130, marks=pytest.mark.slow)])
+    @pytest.mark.parametrize("N,C,Co", _grid(
+        [(8, 16, 32), (112, 50, 64), (56, 64, 128)], fast={(112, 50, 64)}))
     def test_shapes(self, B, N, C, Co):
         k = jax.random.split(jax.random.PRNGKey(B * N + C), 3)
         x = jax.random.normal(k[0], (B, N, C))
@@ -32,8 +41,10 @@ class TestConv2s:
 
 
 class TestCnnTrunk:
-    @pytest.mark.parametrize("B", [3, 64, 100])
-    @pytest.mark.parametrize("N", [16, 72, 112])
+    @pytest.mark.parametrize("B", [pytest.param(3, marks=pytest.mark.slow),
+                                   64, pytest.param(100, marks=pytest.mark.slow)])
+    @pytest.mark.parametrize("N", [pytest.param(16, marks=pytest.mark.slow),
+                                   72, pytest.param(112, marks=pytest.mark.slow)])
     def test_fused_equals_chain(self, B, N):
         chans = [50, 64, 128, 128]
         ks = jax.random.split(jax.random.PRNGKey(B + N), 7)
@@ -52,8 +63,8 @@ class TestCnnTrunk:
 class TestDecodeAttn:
     @pytest.mark.parametrize("B,H,KV,hd,S", [
         (1, 4, 4, 16, 64),     # MHA
-        (2, 8, 2, 32, 300),    # GQA, unaligned S
-        (3, 10, 1, 64, 1024),  # MQA (recurrentgemma-style)
+        pytest.param(2, 8, 2, 32, 300, marks=pytest.mark.slow),    # GQA, unaligned S
+        pytest.param(3, 10, 1, 64, 1024, marks=pytest.mark.slow),  # MQA (recurrentgemma-style)
     ])
     def test_vs_oracle(self, B, H, KV, hd, S):
         ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
@@ -65,6 +76,7 @@ class TestDecodeAttn:
             expect = ref.decode_attn_ref(q, k, v, jnp.asarray(cache_len))
             np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
 
+    @pytest.mark.slow
     def test_window_masking(self):
         ks = jax.random.split(jax.random.PRNGKey(7), 3)
         B, H, KV, hd, S = 2, 4, 2, 16, 256
@@ -75,6 +87,7 @@ class TestDecodeAttn:
         expect = ref.decode_attn_ref(q, k, v, jnp.asarray(200), window=64)
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
 
+    @pytest.mark.slow
     def test_bf16_cache(self):
         ks = jax.random.split(jax.random.PRNGKey(9), 3)
         B, H, KV, hd, S = 2, 4, 4, 32, 128

@@ -10,6 +10,10 @@ from repro.models.registry import build_model
 from repro.training.optimizer import AdamConfig, adam_init
 from repro.training.train_loop import make_train_step
 
+# every test compiles a full (reduced) LM forward/train/decode graph —
+# scan-heavy; excluded from the fast tier-1 profile
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 
 

@@ -15,9 +15,14 @@ from repro.core.predictor import (
 )
 
 KINDS = ["fc2", "fc3", "c1", "c3", "rb7", "lstm2", "tx6"]
+# deep residual / sequence models compile multi-second grad graphs
+_HEAVY = {"rb7", "lstm2", "tx6"}
+KINDS_MARKED = [
+    pytest.param(k, marks=pytest.mark.slow) if k in _HEAVY else k for k in KINDS
+]
 
 
-@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("kind", KINDS_MARKED)
 def test_shapes_and_grads(kind):
     cfg = PredictorConfig(kind=kind, ctx_len=16)
     params, specs = init_predictor(jax.random.PRNGKey(0), cfg)

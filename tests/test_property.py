@@ -2,10 +2,22 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import features as F
-from repro.core.simulator import SimConfig, _suffix_any, _suffix_count, drain_cycles, init_state, sim_step
+from repro.core.simulator import (
+    SimConfig,
+    _suffix_any,
+    _suffix_count,
+    drain_cycles,
+    init_state,
+    sim_step,
+    simulate_many,
+    simulate_trace,
+)
 from repro.des.cache import Cache
 from repro.runtime import hlo as hlo_lib
 from repro.training.optimizer import AdamConfig, adam_init, adam_update
@@ -92,6 +104,49 @@ def test_retirement_never_reorders(execs, advance):
         elif started:
             seen_invalid_after_valid = True
     assert ok
+
+
+# ------------------------------------------------------- multi-workload pack
+def _synthetic_arrs(T, seed):
+    rng = np.random.default_rng(seed)
+    is_store = rng.random(T) < 0.2
+    feat = (rng.random((T, F.STATIC_END)) * (rng.random((T, F.STATIC_END)) < 0.3)).astype(np.float32)
+    feat[:, 7] = is_store  # Op.STORE one-hot column must agree with is_store
+    return {
+        "feat": feat,
+        "addr": rng.integers(0, 50, (T, F.N_ADDR_KEYS)).astype(np.int32),
+        "is_store": is_store,
+        "labels": rng.integers(0, 30, (T, 3)).astype(np.float32),
+    }
+
+
+def _check_packed_matches_separate(jobs):
+    """jobs: list of (T, lanes, seed). Teacher-forced packed totals must be
+    bit-identical to separate per-workload runs, for ANY job mix."""
+    cfg = SimConfig(ctx_len=8)
+    arrs = [_synthetic_arrs(T, seed) for T, _, seed in jobs]
+    lanes = [ln for _, ln, _ in jobs]
+    many = simulate_many(arrs, None, cfg, n_lanes=lanes)
+    for i, (a, ln) in enumerate(zip(arrs, lanes)):
+        ref = simulate_trace(a, None, cfg, ln)
+        assert float(many["workload_cycles"][i]) == float(ref["total_cycles"])
+        assert int(many["workload_overflow"][i]) == int(ref["overflow"])
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(8, 40),  # T instructions
+            st.integers(1, 4),  # lanes
+            st.integers(0, 100),  # workload seed
+        ),
+        min_size=1,
+        max_size=4,
+    )
+)
+@settings(max_examples=8, deadline=None)
+def test_packed_workloads_match_separate_runs(jobs):
+    _check_packed_matches_separate(jobs)
 
 
 # ----------------------------------------------------------------- cache LRU

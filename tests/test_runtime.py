@@ -20,6 +20,11 @@ MESH_AXES_1POD = ("data", "model")
 MESH_AXES_2POD = ("pod", "data", "model")
 
 
+# fast tier keeps one arch per family (dense / EP-MoE / recurrent);
+# the full sharding grid runs in the slow profile
+FAST_SHARDING_ARCHS = {"tinyllama-1.1b", "phi3.5-moe-42b-a6.6b", "recurrentgemma-2b"}
+
+
 class TestShardingRules:
     def test_pod_axis_filtered_on_single_pod(self):
         cfg = get_config("tinyllama-1.1b")
@@ -37,7 +42,10 @@ class TestShardingRules:
         assert to_pspec(("expert", "embed", "mlp"), r_tp, MESH_AXES_1POD) == P(None, "data", "model")
         assert to_pspec(("expert", "embed", "mlp"), r_ep, MESH_AXES_1POD) == P("model", "data")
 
-    @pytest.mark.parametrize("arch", list_archs())
+    @pytest.mark.parametrize("arch", [
+        a if a in FAST_SHARDING_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+        for a in list_archs()
+    ])
     @pytest.mark.parametrize("mode", ["train", "decode", "decode_long"])
     def test_no_duplicate_mesh_axes_any_arch(self, arch, mode):
         """Every param spec must be a VALID PartitionSpec (no axis reuse) and

@@ -14,6 +14,7 @@ from repro.serving.engine import DecodeEngine, lm_decoder
 from repro.serving.simnet_engine import SimNetEngine
 
 
+@pytest.mark.slow
 def test_decode_engine_greedy(small_trace):
     cfg = get_reduced_config("tinyllama-1.1b")
     model = build_model(cfg)

@@ -31,6 +31,7 @@ def test_ce_mask():
     assert float(next_token_ce(logits, tokens, mask)) == pytest.approx(np.log(5), rel=1e-5)
 
 
+@pytest.mark.slow
 def test_accum_equivalent_to_full_batch():
     cfg = get_reduced_config("tinyllama-1.1b")
     model = build_model(cfg)
@@ -51,6 +52,7 @@ def test_accum_equivalent_to_full_batch():
     assert err < 5e-3  # bf16 microbatch reduction tolerance
 
 
+@pytest.mark.slow
 def test_loss_decreases_over_steps():
     cfg = get_reduced_config("qwen3-4b")
     model = build_model(cfg)
