@@ -4,8 +4,14 @@ table reads (resumable: steps skip if their artifact exists).
   python -m benchmarks.pipeline           # full run (background-friendly)
   python -m benchmarks.pipeline --quick   # tiny settings (CI smoke)
 
+Built on the session API: every model is trained once (`SimNet.train`),
+saved as a `PredictorArtifact` directory under models/, and every
+evaluation reloads the artifact and routes through the engine pack path
+(`SimNet.simulate_many` / `SimNet.sweep`) — the same flow as
+`python -m repro train/simulate/sweep`.
+
 Artifacts (artifacts/simnet/):
-  models/<kind>.pkl        trained predictors
+  models/<kind>/           PredictorArtifact dirs (params + configs + metadata)
   table4.json              model zoo: prediction err, sim err, MFlops (Table 4)
   fig56_cpi.json           per-benchmark CPIs + phase curves (Figs. 5, 6)
   fig7_subtrace.json       parallel-lane error vs sub-trace size (Fig. 7)
@@ -18,19 +24,18 @@ from __future__ import annotations
 
 import argparse
 import json
-import pickle
 import time
 from pathlib import Path
 
-import jax
 import numpy as np
 
+from repro.checkpoint import PredictorArtifact
 from repro.core import api
+from repro.core.api import SimNet
 from repro.core.predictor import PredictorConfig, inference_mflops
 from repro.core.simulator import SimConfig
-from repro.des.history import trace_with_history
 from repro.des.o3 import A64FX_CONFIG, O3Config, O3Simulator
-from repro.des.workloads import ALL_BENCHMARKS, ML_BENCHMARKS, SIM_BENCHMARKS, get_benchmark
+from repro.des.workloads import ML_BENCHMARKS, SIM_BENCHMARKS, get_benchmark
 
 ART = Path("artifacts/simnet")
 TRACE_DIR = "artifacts/traces"
@@ -77,20 +82,17 @@ def get_traces(quick):
 
 
 def train_zoo(data, quick, skip_missing=False):
+    """Train every zoo model once and save it as a PredictorArtifact dir;
+    later steps reload the artifacts (train-once / simulate-everywhere)."""
     (ART / "models").mkdir(parents=True, exist_ok=True)
-    results = {}
     for kind, output, epochs in ZOO:
-        if skip_missing and not (ART / "models" / f"{model_id(kind, output)}.pkl").exists():
-            continue
         mid = model_id(kind, output)
-        path = ART / "models" / f"{mid}.pkl"
-        pcfg = PredictorConfig(kind=kind, ctx_len=64, output=output)
-        if path.exists():
-            with open(path, "rb") as f:
-                saved = pickle.load(f)
-            results[mid] = {"params": saved["params"], "pcfg": pcfg}
+        path = ART / "models" / mid
+        if PredictorArtifact.exists(path):
             continue
-        t0 = time.time()
+        if skip_missing:
+            continue
+        pcfg = PredictorConfig(kind=kind, ctx_len=64, output=output)
         if kind == "ithemal_lstm2":
             from repro.core.dataset import ithemal_samples
 
@@ -110,24 +112,20 @@ def train_zoo(data, quick, skip_missing=False):
         else:
             dset = data["dataset"]
         ep = max(1, epochs // 4) if quick else epochs
-        params, hist = api.train_predictor(dset, pcfg, epochs=ep, batch_size=1024, log_every=1)
-        errs = api.prediction_errors(params, pcfg, dset["test_x"], dset["test_y"])
-        with open(path, "wb") as f:
-            pickle.dump({"params": jax.device_get(params), "pcfg": pcfg,
-                         "history": hist, "pred_errors": errs,
-                         "train_seconds": time.time() - t0}, f)
-        print(f"[pipeline] trained {mid} in {time.time()-t0:.0f}s: {errs}", flush=True)
-        results[mid] = {"params": params, "pcfg": pcfg}
-    return results
+        sn = SimNet.train(dset, pcfg, SimConfig(ctx_len=64),
+                          epochs=ep, batch_size=1024, log_every=1)
+        sn.save(path)
+        tr_res = sn.train_result
+        print(f"[pipeline] trained {mid} in {tr_res.seconds:.0f}s: "
+              f"{tr_res.pred_errors}", flush=True)
 
 
-def load_model(mid):
-    with open(ART / "models" / f"{mid}.pkl", "rb") as f:
-        saved = pickle.load(f)
-    return saved
+def load_session(mid) -> SimNet:
+    """Reload a zoo model's artifact as a simulation session."""
+    return SimNet.from_artifact(ART / "models" / mid)
 
 
-def step_table4(data, models, quick):
+def step_table4(data, quick):
     if _exists("table4.json"):
         return
     out = {}
@@ -136,15 +134,15 @@ def step_table4(data, models, quick):
     for kind, output, _ in ZOO:
         mid = model_id(kind, output)
         try:
-            saved = load_model(mid)
-        except FileNotFoundError:
+            sn = load_session(mid)
+        except (FileNotFoundError, ValueError):
             print(f"[pipeline] table4: {mid} not trained yet — skipped", flush=True)
             continue
-        pcfg = saved["pcfg"]
+        train_meta = sn.artifact.metadata.get("train", {})
         row = {
-            "mflops": inference_mflops(pcfg),
-            "pred_errors": saved["pred_errors"],
-            "train_seconds": saved.get("train_seconds"),
+            "mflops": inference_mflops(sn.pcfg),
+            "pred_errors": train_meta.get("pred_errors"),
+            "train_seconds": train_meta.get("seconds"),
             "sim_errors": {},
         }
         if kind == "ithemal_lstm2":
@@ -153,9 +151,9 @@ def step_table4(data, models, quick):
             out[mid] = row
             continue
         traces_for_model = eval_traces[:4] if kind in SLOW_KINDS else eval_traces
-        for tr in traces_for_model:
-            res = api.simulate(tr, saved["params"], pcfg, n_lanes=8)
-            row["sim_errors"][tr.name] = float(res["cpi_error"])
+        # one packed call per model instead of len(traces) sequential ones
+        res = sn.simulate_many(traces_for_model, n_lanes=8)
+        row["sim_errors"] = {w.name: float(w.cpi_error) for w in res}
         errs = row["sim_errors"]
         ml_errs = [v for k, v in errs.items() if any(k.startswith(n.split("[")[0]) for n in names_ml)]
         sim_errs = [v for k, v in errs.items() if k.startswith("sim_")]
@@ -173,16 +171,16 @@ def step_fig56(data, quick):
     out = {"benchmarks": {}, "phase_curves": {}}
     eval_traces = data["ml_eval"] + data["sim_traces"]
     for mid in ["c3_hybrid", "rb7_hybrid"]:
-        saved = load_model(mid)
+        sn = load_session(mid)
         # all evaluation benchmarks packed into ONE scan (batched engine)
-        many = api.simulate_many(eval_traces, saved["params"], saved["pcfg"], n_lanes=8)
-        for w in many["workloads"]:
-            out["benchmarks"].setdefault(w["name"], {})[mid] = {
-                "cpi": w["cpi"], "des_cpi": w["des_cpi"], "err": w["cpi_error"],
+        many = sn.simulate_many(eval_traces, n_lanes=8)
+        for w in many:
+            out["benchmarks"].setdefault(w.name, {})[mid] = {
+                "cpi": w.cpi, "des_cpi": w.des_cpi, "err": w.cpi_error,
             }
         # phase curves on the phased benchmark
         tr = [t for t in data["sim_traces"] if "phased" in t.name][0]
-        sim_cpi, des_cpi = api.phase_cpis(tr, saved["params"], saved["pcfg"],
+        sim_cpi, des_cpi = api.phase_cpis(tr, sn.params, sn.pcfg,
                                           n_lanes=4, window=1000)
         out["phase_curves"][mid] = {"simnet": sim_cpi.tolist(), "des": des_cpi.tolist()}
     _save_json("fig56_cpi.json", out)
@@ -191,7 +189,7 @@ def step_fig56(data, quick):
 def step_fig7(data, quick):
     if _exists("fig7_subtrace.json"):
         return
-    saved = load_model("c3_hybrid")
+    sn = load_session("c3_hybrid")
     tr = data["ml_eval"][0]
     lanes_sweep = [1, 2, 4, 8, 16, 32] if not quick else [1, 4, 16]
     out = {"trace": tr.name, "n_instructions": int(tr.n), "points": []}
@@ -207,21 +205,20 @@ def step_fig7(data, quick):
         cur.append(lanes)
     groups.append(cur)
     for g in groups:
-        many = api.simulate_many([tr] * len(g), saved["params"], saved["pcfg"],
-                                 n_lanes=g)
-        for lanes, w in zip(g, many["workloads"]):
+        many = sn.simulate_many([tr] * len(g), n_lanes=g)
+        for lanes, w in zip(g, many):
             out["points"].append({
                 "lanes": lanes, "subtrace_len": int(tr.n // lanes),
-                "cpi_error": w["cpi_error"],
+                "cpi_error": w.cpi_error,
             })
-            print(f"[pipeline] fig7 lanes={lanes}: err={w['cpi_error']:.4f}", flush=True)
+            print(f"[pipeline] fig7 lanes={lanes}: err={w.cpi_error:.4f}", flush=True)
     _save_json("fig7_subtrace.json", out)
 
 
 def step_fig89(data, quick):
     if _exists("fig89_throughput.json"):
         return
-    saved = load_model("c3_hybrid")
+    sn = load_session("c3_hybrid")
     tr = data["sim_traces"][0]
     out = {"points": [], "des_ips": None, "hardware": "1-core CPU container (TPU is target; see roofline)"}
     # DES baseline throughput
@@ -230,46 +227,54 @@ def step_fig89(data, quick):
     O3Simulator(O3Config()).run(prog)
     out["des_ips"] = 20000 / (time.time() - t0)
     for lanes in ([4, 16, 64, 256] if not quick else [4, 16]):
-        res = api.simulate(tr, saved["params"], saved["pcfg"], n_lanes=lanes)
-        out["points"].append({"lanes": lanes, "ips": float(res["throughput_ips"])})
-        print(f"[pipeline] fig89 lanes={lanes}: {res['throughput_ips']:.0f} IPS", flush=True)
-    # fused-kernel path (beyond-paper): same lanes, Pallas trunk
-    res = api.simulate(tr, saved["params"], saved["pcfg"], n_lanes=64, use_kernel=False)
+        res = sn.simulate(tr, n_lanes=lanes)  # timeit: steady-state IPS
+        out["points"].append({"lanes": lanes, "ips": float(res.throughput_ips)})
+        print(f"[pipeline] fig89 lanes={lanes}: {res.throughput_ips:.0f} IPS", flush=True)
     _save_json("fig89_throughput.json", out)
 
 
 def step_table5(data, quick):
     if _exists("table5_usecases.json"):
         return
-    saved = load_model("c3_hybrid")
-    pcfg = saved["pcfg"]
+    sn = load_session("c3_hybrid")
     n = 6000 if quick else 20000
     bench_names = ["mlb_branchy", "sim_branchy_hard", "sim_loop", "sim_chase_small"]
     out = {"branch_predictor": {}, "l2_size": {}}
 
     # --- branch predictor study: baseline bimodal vs bimode vs tage ---
-    # every (design point × benchmark) cell packs into one batched call
+    # the whole study is ONE SimNet.sweep call: every (design point ×
+    # benchmark) cell packs into one engine dispatch
+    jobs = []
     for bp in ["bimodal", "bimode", "tage"]:
-        traces = [O3Simulator(O3Config(bpred=bp)).run(get_benchmark(name, n))
-                  for name in bench_names]
-        many = api.simulate_many(traces, saved["params"], pcfg, n_lanes=8)
+        sim = O3Simulator(O3Config(bpred=bp))
+        for name in bench_names:
+            jobs.append((bp, sim.run(get_benchmark(name, n))))
+    swept = sn.sweep(jobs, n_lanes=8)
+    for bp in swept.points:
         out["branch_predictor"][bp] = {
-            "des": {name: tr.total_cycles for name, tr in zip(bench_names, traces)},
-            "simnet": {name: w["total_cycles"]
-                       for name, w in zip(bench_names, many["workloads"])},
+            "des": {w.name: w.des_cycles for w in swept.point(bp)},
+            "simnet": {w.name: w.total_cycles for w in swept.point(bp)},
         }
         print(f"[pipeline] table5 bpred={bp} done", flush=True)
 
     # --- L2 size exploration ---
-    l2_names = ["sim_chase_small", "mlb_stream"]
+    # needs a workload whose working set straddles the swept sizes AND
+    # enough accesses to build reuse: sim_chase_mid cycles 2MB (256KB
+    # thrashes, 1MB partially holds it, 4MB fits), sim_chase (16MB)
+    # covers the thrash-everything regime. sim_chase_small (256KB) fit in
+    # the smallest L2, so every size produced identical DES cycles.
+    n_l2 = 30000 if quick else 150000
+    l2_names = ["sim_chase_mid", "sim_chase"]
+    jobs = []
     for l2 in [256 * 1024, 1024 * 1024, 4 * 1024 * 1024]:
-        traces = [O3Simulator(O3Config(caches=dict(l2_size=l2))).run(get_benchmark(name, n))
-                  for name in l2_names]
-        many = api.simulate_many(traces, saved["params"], pcfg, n_lanes=8)
-        out["l2_size"][str(l2)] = {
-            "des": {name: tr.total_cycles for name, tr in zip(l2_names, traces)},
-            "simnet": {name: w["total_cycles"]
-                       for name, w in zip(l2_names, many["workloads"])},
+        sim = O3Simulator(O3Config(caches=dict(l2_size=l2)))
+        for name in l2_names:
+            jobs.append((str(l2), sim.run(get_benchmark(name, n_l2))))
+    swept = sn.sweep(jobs, n_lanes=8)
+    for l2 in swept.points:
+        out["l2_size"][l2] = {
+            "des": {w.name: w.des_cycles for w in swept.point(l2)},
+            "simnet": {w.name: w.total_cycles for w in swept.point(l2)},
         }
         print(f"[pipeline] table5 l2={l2} done", flush=True)
     _save_json("table5_usecases.json", out)
@@ -280,35 +285,34 @@ def step_throughput(data, quick):
     multi-workload engine's headline number: instructions/sec both ways)."""
     if _exists("packed_throughput.json"):
         return
-    saved = load_model("c3_hybrid")
+    art = load_session("c3_hybrid").artifact
     traces = (data["ml_eval"] + data["sim_traces"])[: 6 if quick else 12]
     lanes = 8
-    # sequential: one compile+dispatch cycle per workload — the pre-packing
-    # pipeline behaviour (and the serialization the motivation calls out)
+    # sequential: a fresh engine per workload — one compile+dispatch cycle
+    # each, the pre-packing pipeline behaviour (and the serialization the
+    # batched engine's motivation calls out)
     t0 = time.time()
-    seq = [api.simulate(tr, saved["params"], saved["pcfg"], n_lanes=lanes)
-           for tr in traces]
-    seq_run = sum(r["seconds"] for r in seq)  # compiled-call time only
-    # api.simulate executes each compiled scan twice (warmup + timed run);
-    # subtract the timed re-runs so the baseline is an honest single pass
+    seq = [SimNet(art).simulate(tr, n_lanes=lanes, timeit=True) for tr in traces]
+    seq_run = sum(r.seconds for r in seq)  # compiled-call time only
+    # timeit executes each compiled pass twice (warmup + timed); subtract
+    # the timed re-runs so the baseline is an honest single pass
     # (compile + one execution per workload), same shape as the packed side
     seq_wall = (time.time() - t0) - seq_run
-    n_seq = sum(r["n_instructions"] for r in seq)
-    many = api.simulate_many(traces, saved["params"], saved["pcfg"],
-                             n_lanes=lanes, timeit=True)
+    n_seq = sum(r.total_instructions for r in seq)
+    many = SimNet(art).simulate_many(traces, n_lanes=lanes, timeit=True)
     out = {
         "n_workloads": len(traces),
         "lanes_per_workload": lanes,
         "sequential": {"ips": n_seq / seq_run, "seconds": seq_run,
                        "wall_seconds": seq_wall,  # per-call compiles + 1 run each
                        "n_instructions": n_seq},
-        "packed": {"ips": many["throughput_ips"], "seconds": many["seconds"],
-                   "wall_seconds": many["first_call_seconds"],  # one compile+run
-                   "n_instructions": many["total_instructions"]},
+        "packed": {"ips": many.throughput_ips, "seconds": many.seconds,
+                   "wall_seconds": many.first_call_seconds,  # one compile+run
+                   "n_instructions": many.total_instructions},
         # headline: whole-sweep wall clock, packed vs one-call-per-workload
-        "speedup_wall": seq_wall / many["first_call_seconds"],
+        "speedup_wall": seq_wall / many.first_call_seconds,
         # steady state: compiled call vs compiled call
-        "speedup_steady": many["throughput_ips"] / (n_seq / seq_run),
+        "speedup_steady": many.throughput_ips / (n_seq / seq_run),
     }
     print(f"[pipeline] throughput: sequential {out['sequential']['ips']:.0f} IPS, "
           f"packed {out['packed']['ips']:.0f} IPS "
@@ -318,21 +322,32 @@ def step_throughput(data, quick):
 
 
 def step_a64fx(quick):
+    """Second processor configuration (§4.1): train on A64FX-labelled
+    traces, save the artifact, evaluate held-out benchmarks in ONE pack."""
     if _exists("a64fx.json"):
         return
     n_ml = 8000 if quick else 60000
     n_ev = 4000 if quick else 20000
     ml = api.generate_traces(sorted(ML_BENCHMARKS), n_ml, o3=A64FX_CONFIG, cache_dir=TRACE_DIR)
     scfg = SimConfig(ctx_len=64)
-    data = api.build_training_data(ml, scfg)
     pcfg = PredictorConfig(kind="c3", ctx_len=64)
-    params, _ = api.train_predictor(data, pcfg, epochs=2 if quick else 10, batch_size=1024)
-    errs = api.prediction_errors(params, pcfg, data["test_x"], data["test_y"])
-    out = {"pred_errors": errs, "sim_errors": {}}
-    for name in ["sim_loop", "sim_branchy_easy", "sim_stream2", "sim_compute2"]:
-        tr = api.generate_traces([name], n_ev, o3=A64FX_CONFIG, cache_dir=TRACE_DIR)[0]
-        res = api.simulate(tr, params, pcfg, n_lanes=8)
-        out["sim_errors"][name] = float(res["cpi_error"])
+    art_path = ART / "models" / "a64fx_c3"
+    if PredictorArtifact.exists(art_path):
+        sn = SimNet.from_artifact(art_path)
+    else:
+        data = api.build_training_data(ml, scfg)
+        sn = SimNet.train(data, pcfg, scfg,
+                          epochs=2 if quick else 10, batch_size=1024)
+        sn.save(art_path)
+    eval_names = ["sim_loop", "sim_branchy_easy", "sim_stream2", "sim_compute2"]
+    eval_traces = api.generate_traces(eval_names, n_ev, o3=A64FX_CONFIG, cache_dir=TRACE_DIR)
+    # held-out evaluation rides one simulate_many pack, not per-trace calls
+    res = sn.simulate_many(eval_traces, n_lanes=8)
+    out = {
+        "pred_errors": sn.artifact.metadata.get("train", {}).get("pred_errors"),
+        "sim_errors": {name: float(w.cpi_error)
+                       for name, w in zip(eval_names, res)},
+    }
     out["sim_avg"] = float(np.mean(list(out["sim_errors"].values())))
     _save_json("a64fx.json", out)
 
@@ -360,9 +375,8 @@ def main():
     train_zoo(data, args.quick, skip_missing=args.eval_only)
     steps = args.steps.split(",") if args.steps != "all" else [
         "table4", "fig56", "fig7", "fig89", "throughput", "table5", "a64fx"]
-    models = None
     if "table4" in steps:
-        step_table4(data, models, args.quick)
+        step_table4(data, args.quick)
     if "fig56" in steps:
         step_fig56(data, args.quick)
     if "fig7" in steps:

@@ -1,5 +1,9 @@
 """Benchmark harness: one section per paper table/figure, reading the
 artifacts produced by benchmarks/pipeline.py and the dry-run sweep.
+(The pipeline trains each model once into a PredictorArtifact directory
+under artifacts/simnet/models/ and evaluates through the SimNet session
+API — `python -m repro simulate --artifact artifacts/simnet/models/c3_hybrid`
+reuses the same predictors interactively.)
 
   PYTHONPATH=src python -m benchmarks.run            # print all tables
   PYTHONPATH=src python -m benchmarks.run --csv      # plus name,us_per_call,derived CSV
@@ -48,7 +52,7 @@ def table4():
     f = lambda x: f"{100*x:6.1f}%" if x is not None else "     —"
     print(f"{'model':16s} {'MFlops':>8s} {'fetch':>7s} {'exec':>7s} {'store':>7s} {'train avg':>9s} {'sim avg':>8s} {'all avg':>8s}")
     for mid, row in data.items():
-        pe = row["pred_errors"]
+        pe = row["pred_errors"] or {"fetch": None, "execution": None, "store": None}
         print(
             f"{mid:16s} {row['mflops']:8.2f} {f(pe['fetch'])} {f(pe['execution'])} "
             f"{f(pe['store'])}  {f(row.get('train_avg'))}  {f(row.get('sim_avg'))} {f(row.get('all_avg'))}"

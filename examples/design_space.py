@@ -1,44 +1,48 @@
 """Design-space exploration (paper §5): compare L2 cache sizes WITHOUT
 retraining — only the lightweight history-context simulation changes; the
-trained predictor is reused as-is.
+trained predictor is reused as-is via `SimNet.sweep`.
 
   PYTHONPATH=src python examples/design_space.py
-"""
-import time
 
-from examples.simulate_workload import get_or_train_model
-from repro.core import api, features as F
-from repro.core.simulator import SimConfig
+CLI equivalent (predictor mode needs a saved artifact):
+
+  python -m repro sweep --artifact artifacts/simnet/models/c3_hybrid \
+      --param l2 --bench sim_chase_mid -n 60000
+"""
+from examples.simulate_workload import get_session
 from repro.des.history import trace_with_history
 from repro.des.o3 import O3Config, O3Simulator
 from repro.des.workloads import get_benchmark
-from repro.serving.simnet_engine import SimNetEngine
 
-N = 20000
+N = 60000
 L2_SIZES = [256 * 1024, 1024 * 1024, 4 * 1024 * 1024]
 
 
 def main():
-    params, pcfg = get_or_train_model()
-    engine = SimNetEngine(params, pcfg, SimConfig(ctx_len=pcfg.ctx_len))
-    prog = get_benchmark("sim_chase_small", N)
+    sn = get_session()
+    # working set (2MB) straddles the swept sizes, so they differentiate
+    prog = get_benchmark("sim_chase_mid", N)
 
-    # all design points ride ONE packed scan: each L2 size contributes its
-    # own lanes (batched multi-workload engine), so the whole exploration
-    # is a single compile+dispatch cycle instead of len(L2_SIZES) of them
-    des_runs = [O3Simulator(O3Config(caches=dict(l2_size=l2))).run(prog) for l2 in L2_SIZES]
-    arrs = [F.trace_arrays(trace_with_history(prog, caches=dict(l2_size=l2)))
+    # all design points ride ONE packed scan (SimNet.sweep): each L2 size
+    # contributes its own lanes, so the whole exploration is a single
+    # compile+dispatch cycle instead of len(L2_SIZES) of them
+    des_runs = {l2: O3Simulator(O3Config(caches=dict(l2_size=l2))).run(prog)
+                for l2 in L2_SIZES}
+    jobs = [(f"{l2//1024}kB", trace_with_history(prog, caches=dict(l2_size=l2)))
             for l2 in L2_SIZES]
-    res = engine.simulate_many(arrs, n_lanes=8, chunk=512)
+    swept = sn.sweep(jobs, n_lanes=8, chunk=512)
 
     print(f"{'L2 size':>9s} {'DES CPI':>9s} {'SimNet CPI':>11s} {'DES speedup':>12s} {'SimNet speedup':>15s}")
-    base_des, base_sim = des_runs[0].cpi, float(res["workload_cpi"][0])
-    for l2, des, cpi in zip(L2_SIZES, des_runs, res["workload_cpi"]):
-        cpi = float(cpi)
-        print(f"{l2//1024:7d}kB {des.cpi:9.3f} {cpi:11.3f} "
-              f"{100*(base_des/des.cpi-1):+11.2f}% {100*(base_sim/cpi-1):+14.2f}%")
-    print(f"\n{res['n_workloads']} design points simulated in one packed call "
-          f"({res['throughput_ips']:.0f} instr/s). Relative speedups from the ML "
+    base_des = des_runs[L2_SIZES[0]].cpi
+    base_sim = swept.point(swept.points[0])[0].cpi
+    for l2, label in zip(L2_SIZES, swept.points):
+        w = swept.point(label)[0]
+        des = des_runs[l2]
+        print(f"{l2//1024:7d}kB {des.cpi:9.3f} {w.cpi:11.3f} "
+              f"{100*(base_des/des.cpi-1):+11.2f}% {100*(base_sim/w.cpi-1):+14.2f}%")
+    res = swept.result
+    print(f"\n{res.n_workloads} design points simulated in one packed call "
+          f"({res.throughput_ips:.0f} instr/s). Relative speedups from the ML "
           "simulator track the DES without any retraining — the paper's "
           "'pre-trained models directly applicable' claim.")
 

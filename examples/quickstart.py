@@ -1,20 +1,29 @@
-"""Quickstart: train a SimNet latency predictor and simulate a program.
+"""Quickstart: the SimNet session API end to end.
 
 Runs in a few minutes on CPU:
   1. run the reference DES over two small benchmarks (ground truth),
-  2. build a teacher-forced dataset and train a C3 predictor,
-  3. ML-simulate a held-out benchmark, compare CPI vs the DES.
+  2. `SimNet.train` a C3 predictor and save it as a PredictorArtifact,
+  3. reload the artifact (as a later process would) and ML-simulate a
+     held-out benchmark through the engine pack path, CPI vs the DES.
 
   PYTHONPATH=src python examples/quickstart.py
+
+The same flow without writing Python:
+
+  python -m repro train --bench mlb_mixed mlb_branchy -n 20000 \
+      --epochs 6 --artifact artifacts/models/quickstart
+  python -m repro simulate --artifact artifacts/models/quickstart \
+      --bench sim_loop -n 10000
 """
 import time
 
 from repro.core import api
+from repro.core.api import SimNet
 from repro.core.predictor import PredictorConfig
-from repro.core.simulator import SimConfig
 
 T_TRAIN = 20000
 T_EVAL = 10000
+ARTIFACT = "artifacts/models/quickstart"
 
 
 def main():
@@ -24,21 +33,22 @@ def main():
     for tr in traces:
         print(f"  {tr.name}: {tr.n} instructions, CPI {tr.cpi:.3f}")
 
-    print("== 2. teacher-forced dataset + C3 training ==")
-    data = api.build_training_data(traces, SimConfig(ctx_len=64))
-    print(f"  {len(data['train_x'])} training samples (deduplicated)")
-    pcfg = PredictorConfig(kind="c3", ctx_len=64)
-    params, hist = api.train_predictor(data, pcfg, epochs=6, batch_size=512, log_every=1)
-    errs = api.prediction_errors(params, pcfg, data["test_x"], data["test_y"])
-    print(f"  per-latency prediction errors: {errs}")
+    print("== 2. train once (SimNet.train), save the artifact ==")
+    sn = SimNet.train(traces, PredictorConfig(kind="c3", ctx_len=64),
+                      epochs=6, batch_size=512, log_every=1)
+    print(f"  per-latency prediction errors: {sn.train_result.pred_errors}")
+    sn.save(ARTIFACT)
+    print(f"  saved PredictorArtifact → {ARTIFACT}")
 
-    print("== 3. ML simulation of a held-out benchmark ==")
+    print("== 3. reload + ML-simulate a held-out benchmark ==")
+    sn = SimNet.from_artifact(ARTIFACT)  # what a later process would do
     tr = api.generate_traces(["sim_loop"], T_EVAL)[0]
-    res = api.simulate(tr, params, pcfg, n_lanes=8)
-    print(f"  DES CPI {res['des_cpi']:.3f} vs SimNet CPI {res['cpi']:.3f} "
-          f"(error {100*res['cpi_error']:.1f}%)")
-    print(f"  throughput: {res['throughput_ips']:.0f} instr/s on "
-          f"{res['n_lanes']} parallel lanes (1-core CPU)")
+    res = sn.simulate(tr, n_lanes=8)  # SimResult (1-workload pack)
+    w = res[0]
+    print(f"  DES CPI {w.des_cpi:.3f} vs SimNet CPI {w.cpi:.3f} "
+          f"(error {100*w.cpi_error:.1f}%)")
+    print(f"  throughput: {res.throughput_ips:.0f} instr/s on "
+          f"{w.n_lanes} parallel lanes (1-core CPU)")
     print(f"done in {time.time()-t0:.0f}s")
 
 

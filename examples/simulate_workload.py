@@ -2,40 +2,41 @@
 stream of simulation requests through the distributed SimNet engine.
 
 Pipeline: synthetic program → lightweight history-context simulation (fast
-path — no DES pipeline model!) → massively-parallel ML simulation on the
-serving engine → accuracy + throughput report vs the reference DES.
+path — no DES pipeline model!) → massively-parallel ML simulation via the
+SimNet session (engine pack path) → accuracy + throughput vs the DES.
 
   PYTHONPATH=src python examples/simulate_workload.py [--lanes 32] [--n 60000]
 """
 import argparse
-import pickle
 import time
 from pathlib import Path
 
-import jax
-
-from repro.core import api, features as F
+from repro.checkpoint import PredictorArtifact
+from repro.core import api
+from repro.core.api import SimNet
 from repro.core.predictor import PredictorConfig
 from repro.core.simulator import SimConfig
 from repro.des.history import trace_with_history
 from repro.des.o3 import O3Config, O3Simulator
 from repro.des.workloads import get_benchmark
-from repro.serving.simnet_engine import SimNetEngine
+
+ARTIFACT = Path("artifacts/simnet/models/c3_hybrid")
+FALLBACK = Path("artifacts/models/quick_c3")
 
 
-def get_or_train_model():
-    """Reuse the pipeline's trained C3 if present, else train a quick one."""
-    p = Path("artifacts/simnet/models/c3_hybrid.pkl")
-    if p.exists():
-        with open(p, "rb") as f:
-            saved = pickle.load(f)
-        return saved["params"], saved["pcfg"]
-    print("(no pretrained model found — training a quick one)")
-    traces = api.generate_traces(["mlb_mixed", "mlb_stream"], 20000, cache_dir="artifacts/traces")
-    data = api.build_training_data(traces, SimConfig(ctx_len=64))
-    pcfg = PredictorConfig(kind="c3", ctx_len=64)
-    params, _ = api.train_predictor(data, pcfg, epochs=6, batch_size=512)
-    return params, pcfg
+def get_session() -> SimNet:
+    """Reuse the pipeline's trained artifact if present, else train a quick
+    one and save it so the next run reloads instead of retraining."""
+    for path in (ARTIFACT, FALLBACK):
+        if PredictorArtifact.exists(path):
+            return SimNet.from_artifact(path)
+    print("(no pretrained artifact found — training a quick one)")
+    traces = api.generate_traces(["mlb_mixed", "mlb_stream"], 20000,
+                                 cache_dir="artifacts/traces")
+    sn = SimNet.train(traces, PredictorConfig(kind="c3", ctx_len=64),
+                      SimConfig(ctx_len=64), epochs=6, batch_size=512)
+    sn.save(FALLBACK)
+    return sn
 
 
 def main():
@@ -45,7 +46,7 @@ def main():
     ap.add_argument("--lanes", type=int, default=32)
     args = ap.parse_args()
 
-    params, pcfg = get_or_train_model()
+    sn = get_session()
     prog = get_benchmark(args.bench, args.n)
 
     print("== history-context simulation (fast path, no pipeline model) ==")
@@ -55,21 +56,20 @@ def main():
     print(f"  {args.n} instructions in {t_hist:.1f}s ({args.n/t_hist:.0f} IPS)")
 
     print(f"== parallel ML simulation: {args.lanes} lanes ==")
-    engine = SimNetEngine(params, pcfg, SimConfig(ctx_len=pcfg.ctx_len))
-    arrs = F.trace_arrays(trace)
-    res = engine.simulate(arrs, n_lanes=args.lanes, chunk=512)
-    print(f"  SimNet: {res['total_cycles']:.0f} cycles, CPI {res['cpi']:.3f}, "
-          f"{res['throughput_ips']:.0f} instr/s")
+    res = sn.simulate(trace, n_lanes=args.lanes, chunk=512)
+    w = res[0]
+    print(f"  SimNet: {w.total_cycles:.0f} cycles, CPI {w.cpi:.3f}, "
+          f"{res.throughput_ips:.0f} instr/s")
 
     print("== reference DES comparison ==")
     t0 = time.time()
     ref = O3Simulator(O3Config()).run(prog)
     t_des = time.time() - t0
-    err = abs(res["cpi"] - ref.cpi) / ref.cpi
+    err = abs(w.cpi - ref.cpi) / ref.cpi
     print(f"  DES: {ref.total_cycles} cycles, CPI {ref.cpi:.3f}, "
           f"{args.n/t_des:.0f} instr/s")
     print(f"  CPI error {100*err:.2f}%  |  SimNet speedup over DES "
-          f"{(res['throughput_ips']*t_des/args.n):.1f}x on 1 CPU core "
+          f"{(res.throughput_ips*t_des/args.n):.1f}x on 1 CPU core "
           f"(TPU roofline bound: see benchmarks.roofline simnet-c3 cells)")
 
 

@@ -1,3 +1,4 @@
+from repro.checkpoint.artifact import PredictorArtifact
 from repro.checkpoint.manager import CheckpointManager
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "PredictorArtifact"]

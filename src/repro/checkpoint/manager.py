@@ -117,6 +117,13 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: Optional[int] = None) -> dict:
+        """The json manifest of a checkpoint (step, keys, user metadata)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return json.loads((self.dir / f"step_{step:010d}" / "manifest.json").read_text())
+
     def restore(self, step: Optional[int] = None, shardings=None):
         """Load a checkpoint; optionally reshard onto the current mesh.
 

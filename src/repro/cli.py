@@ -1,0 +1,240 @@
+"""`python -m repro` — the SimNet reproduction as a command line tool.
+
+Subcommands mirror the session API (`repro.core.session.SimNet`); every
+command prints a JSON document (the typed results' `.to_dict()`), so runs
+compose with jq / CI checks.
+
+  trace     run the reference DES over benchmarks, cache npz traces
+  train     DES traces → teacher-forced dataset → predictor → artifact dir
+  simulate  load a PredictorArtifact, simulate benchmarks (one packed call)
+  sweep     design-space sweep (L2 sizes or branch predictors) in one pack;
+            without --artifact it replays DES labels teacher-forced through
+            the same engine path (fast structural dry-run, used by CI)
+  bench     packed-vs-sequential engine microbenchmark
+
+Train once, simulate anywhere:
+
+  python -m repro train --bench mlb_mixed mlb_branchy -n 20000 \
+      --artifact artifacts/models/cli_c3 --eval-bench sim_loop
+  python -m repro simulate --artifact artifacts/models/cli_c3 \
+      --bench sim_loop -n 10000 --lanes 8
+
+The second process reloads the artifact and reproduces the first one's
+CPI exactly (params round-trip bit-identically).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import api
+from repro.core.predictor import PredictorConfig
+from repro.core.session import SimNet
+from repro.core.simulator import SimConfig
+from repro.des.o3 import A64FX_CONFIG, O3Config
+
+O3_CONFIGS = {"default": None, "a64fx": A64FX_CONFIG}
+
+
+def _emit(obj):
+    json.dump(obj, sys.stdout, indent=2, default=float)
+    sys.stdout.write("\n")
+
+
+def _gen_traces(benchmarks, n, o3_name, cache_dir):
+    return api.generate_traces(
+        benchmarks, n, o3=O3_CONFIGS[o3_name], cache_dir=cache_dir
+    )
+
+
+# ---------------------------------------------------------------- commands
+
+def cmd_trace(args) -> int:
+    traces = _gen_traces(args.bench, args.n, args.o3, args.cache_dir)
+    _emit({
+        "traces": [
+            {"name": t.name, "n_instructions": int(t.n),
+             "des_cycles": t.total_cycles, "des_cpi": t.cpi}
+            for t in traces
+        ],
+        "cache_dir": args.cache_dir,
+    })
+    return 0
+
+
+def cmd_train(args) -> int:
+    n = max(args.n // 5, 2000) if args.quick else args.n
+    epochs = max(args.epochs // 3, 1) if args.quick else args.epochs
+    traces = _gen_traces(args.bench, n, args.o3, args.cache_dir)
+    pcfg = PredictorConfig(kind=args.kind, ctx_len=args.ctx_len, output=args.output)
+    sn = SimNet.train(
+        traces, pcfg, SimConfig(ctx_len=args.ctx_len),
+        epochs=epochs, batch_size=args.batch_size, lr=args.lr,
+        seed=args.seed, log_every=args.log_every,
+    )
+    out = {"train": sn.train_result.to_dict(), "artifact": None, "eval": None}
+    if args.artifact:
+        sn.save(args.artifact)
+        out["artifact"] = args.artifact
+    if args.eval_bench:
+        ev = _gen_traces(args.eval_bench, args.eval_n or n, args.o3, args.cache_dir)
+        out["eval"] = sn.simulate_many(ev, n_lanes=args.lanes).to_dict()
+    _emit(out)
+    return 0
+
+
+def _session(args) -> SimNet:
+    if args.artifact:
+        return SimNet.from_artifact(args.artifact)
+    # teacher-forced: replay the DES labels through the same engine path
+    return SimNet()
+
+
+def cmd_simulate(args) -> int:
+    sn = _session(args)
+    traces = _gen_traces(args.bench, args.n, args.o3, args.cache_dir)
+    res = sn.simulate_many(traces, n_lanes=args.lanes, timeit=args.timeit)
+    _emit({"artifact": args.artifact, "result": res.to_dict()})
+    return 0
+
+
+def cmd_sweep(args) -> int:
+    from repro.des.history import trace_with_history
+    from repro.des.o3 import O3Simulator
+    from repro.des.workloads import get_benchmark
+
+    defaults = {
+        "l2": ["262144", "1048576", "4194304"],
+        "bpred": ["bimodal", "bimode", "tage"],
+    }[args.param]
+    n = min(args.n, 4000) if args.quick else args.n
+    points = args.points or (defaults[:2] if args.quick else defaults)
+    sn = _session(args)
+    jobs = []
+    for bench in args.bench:
+        prog = get_benchmark(bench, n)
+        for pt in points:
+            if args.param == "l2":
+                label, kw = f"l2={int(pt)//1024}kB", {"caches": dict(l2_size=int(pt))}
+            else:
+                label, kw = f"bpred={pt}", {"bpred": pt}
+            if sn.params is None:
+                # teacher-forced needs DES labels at each design point
+                tr = O3Simulator(O3Config(**kw)).run(prog)
+            else:
+                tr = trace_with_history(prog, **kw)
+            jobs.append((label, tr))
+    res = sn.sweep(jobs, n_lanes=args.lanes)
+    _emit({
+        "param": args.param,
+        "benchmarks": args.bench,
+        "n_instructions": n,
+        "mode": "predictor" if sn.params is not None else "teacher-forced",
+        "sweep": res.to_dict(),
+    })
+    return 0
+
+
+def cmd_bench(args) -> int:
+    """Packed-vs-sequential: W workloads through one packed engine call vs
+    one freshly-compiled engine per workload (the pre-packing behaviour)."""
+    n = 3000 if args.quick else args.n
+    names = args.bench or ["mlb_stream", "mlb_compute", "sim_loop", "mlb_branchy"]
+    traces = _gen_traces(names, n, args.o3, args.cache_dir)
+    art = SimNet.from_artifact(args.artifact).artifact if args.artifact else None
+
+    def fresh():
+        return SimNet(art) if art else SimNet()
+
+    t0 = time.time()
+    seq = [fresh().simulate(t, n_lanes=args.lanes, timeit=False) for t in traces]
+    seq_wall = time.time() - t0
+    packed = fresh().simulate_many(traces, n_lanes=args.lanes)
+    _emit({
+        "n_workloads": len(traces),
+        "lanes_per_workload": args.lanes,
+        "sequential": {"wall_seconds": seq_wall,
+                       "ips": sum(r.total_instructions for r in seq) / seq_wall},
+        "packed": {"wall_seconds": packed.first_call_seconds,
+                   "ips": packed.throughput_ips},
+        "speedup_wall": seq_wall / packed.first_call_seconds,
+    })
+    return 0
+
+
+# ---------------------------------------------------------------- parser
+
+def _common(p, n_default=10000):
+    p.add_argument("--bench", nargs="+", default=None,
+                   help="benchmark names (see repro.des.workloads)")
+    p.add_argument("-n", type=int, default=n_default, help="instructions per benchmark")
+    p.add_argument("--o3", choices=sorted(O3_CONFIGS), default="default",
+                   help="processor configuration for the reference DES")
+    p.add_argument("--cache-dir", default="artifacts/traces")
+    p.add_argument("--lanes", type=int, default=8)
+    p.add_argument("--quick", action="store_true", help="tiny settings (CI smoke)")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="SimNet: train latency predictors, simulate programs (JSON out)",
+    )
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("trace", help="run the reference DES, cache traces")
+    _common(p)
+    p.set_defaults(fn=cmd_trace, bench_default=["mlb_mixed"])
+
+    p = sub.add_parser("train", help="train a predictor, save a PredictorArtifact")
+    _common(p, n_default=20000)
+    p.add_argument("--kind", default="c3")
+    p.add_argument("--ctx-len", type=int, default=64)
+    p.add_argument("--output", choices=["hybrid", "reg"], default="hybrid")
+    p.add_argument("--epochs", type=int, default=6)
+    p.add_argument("--batch-size", type=int, default=512)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--log-every", type=int, default=0)
+    p.add_argument("--artifact", default=None, help="directory to save the artifact")
+    p.add_argument("--eval-bench", nargs="+", default=None,
+                   help="simulate these after training (reports CPI vs DES)")
+    p.add_argument("--eval-n", type=int, default=None)
+    p.set_defaults(fn=cmd_train, bench_default=["mlb_mixed", "mlb_branchy"])
+
+    p = sub.add_parser("simulate", help="simulate benchmarks from a saved artifact")
+    _common(p)
+    p.add_argument("--artifact", default=None,
+                   help="PredictorArtifact directory (omit for teacher-forced replay)")
+    p.add_argument("--timeit", action="store_true",
+                   help="measure steady-state throughput (second compiled pass)")
+    p.set_defaults(fn=cmd_simulate, bench_default=["sim_loop"])
+
+    p = sub.add_parser("sweep", help="design-space sweep in one packed call")
+    _common(p)
+    p.add_argument("--artifact", default=None,
+                   help="PredictorArtifact directory (omit for teacher-forced replay)")
+    p.add_argument("--param", choices=["l2", "bpred"], default="l2")
+    p.add_argument("--points", nargs="+", default=None,
+                   help="design points: l2 sizes in bytes, or bpred names")
+    p.set_defaults(fn=cmd_sweep, bench_default=["sim_chase_mid"])
+
+    p = sub.add_parser("bench", help="packed vs sequential throughput microbench")
+    _common(p, n_default=6000)
+    p.add_argument("--artifact", default=None)
+    p.set_defaults(fn=cmd_bench)
+
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if getattr(args, "bench", None) is None:
+        args.bench = getattr(args, "bench_default", None)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

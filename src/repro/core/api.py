@@ -1,39 +1,70 @@
-"""SimNet public API: generate traces, train predictors, simulate programs.
+"""SimNet public API — sessions, typed results, predictor artifacts.
 
-This is the composable entry point the examples and benchmarks use:
+The API is built around the `SimNet` session (`repro.core.session`): a
+trained latency predictor is a reusable artifact, and every simulation —
+one workload, a multi-workload pack, a design-space sweep — runs through
+the same chunked / donated / mesh-shardable engine pack path.
 
-    traces = api.generate_traces(["mlb_stream", ...], n_instructions=100_000)
-    data   = api.build_training_data(traces)
-    params, hist = api.train_predictor(data, PredictorConfig(kind="c3"))
-    result = api.simulate(trace, params, pcfg, n_lanes=64)
+    from repro.core import api
+    from repro.core.api import SimNet
+    from repro.core.predictor import PredictorConfig
+
+    # 1. ground truth: run the reference DES (cached as npz)
+    traces = api.generate_traces(["mlb_mixed", "mlb_branchy"], 20_000)
+
+    # 2. train once, save the artifact (params + PredictorConfig +
+    #    SimConfig + training metadata in one atomic directory)
+    sn = SimNet.train(traces, PredictorConfig(kind="c3"), epochs=6)
+    sn.save("artifacts/models/c3")
+
+    # 3. simulate anywhere — a later process reloads the artifact and
+    #    reproduces the in-process results exactly
+    sn = SimNet.from_artifact("artifacts/models/c3")
+    res = sn.simulate(trace, n_lanes=64)          # SimResult
+    many = sn.simulate_many(traces, n_lanes=8)    # one packed scan
+    swept = sn.sweep({"256kB": tr0, "4MB": tr1})  # SweepResult, one pack
+
+Results are frozen dataclasses (`repro.core.results`) with `.to_dict()`
+for JSON. The same flow is scriptable end-to-end via the CLI:
+
+    python -m repro trace --bench mlb_mixed -n 20000
+    python -m repro train --bench mlb_mixed mlb_branchy --artifact m/c3
+    python -m repro simulate --artifact m/c3 --bench sim_loop
+    python -m repro sweep --artifact m/c3 --bench sim_chase
+
+Legacy surface: `simulate` / `simulate_many` / `train_predictor` below keep
+their pre-session signatures for one release as thin deprecation shims that
+return the old dict shapes (`SimResult.to_dict()` is exactly that shape).
+`generate_traces`, `build_training_data`, `prediction_errors` and
+`phase_cpis` are not deprecated — they are the data-side helpers.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import features as F
-from repro.core.dataset import build_dataset, ithemal_samples
-from repro.core.predictor import (
-    N_HEADS,
-    PredictorConfig,
-    apply_raw,
-    decode_latency,
-    init_predictor,
-    make_predict_fn,
-    split_heads,
-)
-from repro.core.simulator import SimConfig, simulate_many as _simulate_many_core, simulate_trace
+from repro.core.dataset import build_dataset
+from repro.core.predictor import PredictorConfig, make_predict_fn
+from repro.core.results import SimResult, SweepResult, TrainResult, WorkloadResult
+from repro.core.session import SimNet, prediction_errors, train_loop
+from repro.core.simulator import SimConfig, simulate_trace
 from repro.des.o3 import O3Config, O3Simulator
 from repro.des.trace import Trace
 from repro.des.workloads import get_benchmark
-from repro.training.optimizer import AdamConfig, adam_init, adam_update
+
+__all__ = [
+    "SimNet",
+    "SimResult", "SweepResult", "TrainResult", "WorkloadResult",
+    "generate_traces", "build_training_data", "prediction_errors", "phase_cpis",
+    # deprecated shims
+    "train_predictor", "simulate", "simulate_many",
+]
 
 
 def generate_traces(
@@ -65,29 +96,36 @@ def build_training_data(traces, sim_cfg: Optional[SimConfig] = None, **kw):
     return build_dataset(traces, sim_cfg or SimConfig(), **kw)
 
 
+def phase_cpis(trace: Trace, params, pcfg, sim_cfg=None, n_lanes=16, window=10000):
+    """Per-window CPI curves (paper Fig. 6): returns (simnet, des) arrays.
+
+    Needs the per-step latency stream, which the streaming engine does not
+    materialise (its memory is O(state)); this analysis path runs the
+    one-shot scan with per-step outputs instead.
+    """
+    sim_cfg = sim_cfg or SimConfig(ctx_len=pcfg.ctx_len)
+    arrs = F.trace_arrays(trace)
+    predict = make_predict_fn(params, pcfg)
+    res = jax.jit(lambda: simulate_trace(arrs, predict, sim_cfg, n_lanes))()
+    lats = np.asarray(res["outs"]["lats"])  # (per, L, 3)
+    fetch = np.swapaxes(lats[:, :, 0], 0, 1).reshape(-1)  # lane-major timeline
+    des_fetch = trace.fetch_lat[: len(fetch)]
+    k = len(fetch) // window
+    sim_cpi = fetch[: k * window].reshape(k, window).sum(1) / window
+    des_cpi = des_fetch[: k * window].reshape(k, window).sum(1) / window
+    return sim_cpi, des_cpi
+
+
 # ---------------------------------------------------------------------------
-# training
+# deprecated loose-function surface (one release of compatibility)
 # ---------------------------------------------------------------------------
 
-def _hybrid_loss(raw, y, pcfg: PredictorConfig):
-    """Per-head hybrid CE+MSE (paper §2.4: CE for classification output,
-    squared error for regression). Regression in REG_SCALE space keeps the
-    two terms comparable (raw-cycle MSE would swamp the CE)."""
-    from repro.core.predictor import REG_SCALE
-
-    cls_logits, reg = split_heads(raw, pcfg)
-    y = y.astype(jnp.float32)
-    se = jnp.mean(jnp.square(reg - y * REG_SCALE))
-    if cls_logits is None:
-        return se
-    n_cls = pcfg.n_classes
-    t_int = jnp.clip(y, 0, None).astype(jnp.int32)
-    overflow = t_int >= (n_cls - 1)
-    target = jnp.where(overflow, n_cls - 1, t_int)
-    logp = jax.nn.log_softmax(cls_logits.astype(jnp.float32), axis=-1)
-    onehot = jax.nn.one_hot(target, n_cls, dtype=jnp.float32)
-    ce = -jnp.mean(jnp.sum(logp * onehot, axis=-1))
-    return ce + se
+def _warn_deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.core.api.{old} is deprecated; use {new} (repro.core.session)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def train_predictor(
@@ -100,75 +138,14 @@ def train_predictor(
     seed: int = 0,
     log_every: int = 0,
 ) -> tuple:
-    """Adam training of a latency predictor. Returns (params, history)."""
-    params, _ = init_predictor(jax.random.PRNGKey(seed), pcfg)
-    acfg = AdamConfig(lr=lr, clip_norm=1.0)
-    opt = adam_init(params)
+    """Deprecated: use `SimNet.train`. Returns the legacy (params, history)."""
+    _warn_deprecated("train_predictor", "SimNet.train")
+    params, history = train_loop(
+        data, pcfg, epochs=epochs, batch_size=batch_size, lr=lr,
+        seed=seed, log_every=log_every,
+    )
+    return params, history
 
-    def loss_fn(p, x, y):
-        raw = apply_raw(p, x, pcfg)
-        return _hybrid_loss(raw, y, pcfg)
-
-    @jax.jit
-    def step(p, opt, x, y):
-        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
-        p, opt, _ = adam_update(grads, opt, p, acfg)
-        return p, opt, loss
-
-    @jax.jit
-    def eval_loss(p, x, y):
-        return loss_fn(p, x, y)
-
-    X, Y = data["train_x"], data["train_y"]
-    n = len(X)
-    rng = np.random.default_rng(seed)
-    history = {"train_loss": [], "val_loss": []}
-    best = (np.inf, params)
-    for ep in range(epochs):
-        perm = rng.permutation(n)
-        losses = []
-        for lo in range(0, n - batch_size + 1, batch_size):
-            idx = perm[lo : lo + batch_size]
-            x = jnp.asarray(X[idx], jnp.float32)
-            y = jnp.asarray(Y[idx])
-            params, opt, l = step(params, opt, x, y)
-            losses.append(float(l))
-        vl = []
-        for lo in range(0, len(data["val_x"]) - batch_size + 1, batch_size):
-            vl.append(float(eval_loss(
-                params,
-                jnp.asarray(data["val_x"][lo : lo + batch_size], jnp.float32),
-                jnp.asarray(data["val_y"][lo : lo + batch_size]),
-            )))
-        tl, vloss = float(np.mean(losses)), float(np.mean(vl)) if vl else float("nan")
-        history["train_loss"].append(tl)
-        history["val_loss"].append(vloss)
-        if vloss < best[0]:
-            best = (vloss, jax.tree_util.tree_map(lambda a: a.copy(), params))
-        if log_every and (ep % log_every == 0):
-            print(f"  epoch {ep}: train {tl:.4f} val {vloss:.4f}")
-    return best[1], history
-
-
-def prediction_errors(params, pcfg: PredictorConfig, X, Y, batch_size: int = 1024):
-    """Paper's per-latency-type error: E = |pred - y| / (y + 1), averaged."""
-    @jax.jit
-    def pred(x):
-        return decode_latency(apply_raw(params, x, pcfg), pcfg)
-
-    errs = []
-    for lo in range(0, len(X), batch_size):
-        x = jnp.asarray(X[lo : lo + batch_size], jnp.float32)
-        y = Y[lo : lo + batch_size]
-        p = np.asarray(pred(x))
-        errs.append(np.abs(p - y) / (y + 1.0))
-    e = np.concatenate(errs)
-    return {"fetch": float(e[:, 0].mean()), "execution": float(e[:, 1].mean()), "store": float(e[:, 2].mean())}
-
-
-# ---------------------------------------------------------------------------
-# simulation
-# ---------------------------------------------------------------------------
 
 def simulate(
     trace: Trace,
@@ -178,38 +155,12 @@ def simulate(
     n_lanes: int = 16,
     use_kernel: bool = False,
 ) -> Dict:
-    """ML-based simulation of a trace (history features already inside).
-
-    Returns total cycles, CPI, error vs the DES labels (if present), and
-    measured simulation throughput (paper Figs. 8-10).
-    """
-    sim_cfg = sim_cfg or SimConfig(ctx_len=pcfg.ctx_len)
-    arrs = F.trace_arrays(trace)
-    predict = make_predict_fn(params, pcfg, use_kernel=use_kernel)
-    run = jax.jit(lambda: simulate_trace(arrs, predict, sim_cfg, n_lanes))
-    res = run()  # compile+run
-    jax.block_until_ready(res["total_cycles"])
-    t0 = time.time()
-    res = run()
-    jax.block_until_ready(res["total_cycles"])
-    dt = time.time() - t0
-    total = float(res["total_cycles"])
-    n = res["n_instructions"]
-    out = {
-        "total_cycles": total,
-        "cpi": total / n,
-        "n_instructions": n,
-        "n_lanes": n_lanes,
-        "throughput_ips": n / dt,
-        "seconds": dt,
-        "overflow": int(res["overflow"]),
-    }
-    if trace.fetch_lat.any():
-        ref = trace.total_cycles
-        out["des_cycles"] = ref
-        out["des_cpi"] = ref / trace.n
-        out["cpi_error"] = abs(total / n - ref / trace.n) / (ref / trace.n)
-    return out
+    """Deprecated: use `SimNet.simulate`. Returns the legacy dict shape
+    (now produced by the engine pack path — the old separate
+    `simulate_trace` wiring is gone)."""
+    _warn_deprecated("simulate", "SimNet.simulate")
+    sn = SimNet(params=params, pcfg=pcfg, sim_cfg=sim_cfg, use_kernel=use_kernel)
+    return sn.simulate(trace, n_lanes=n_lanes, timeit=True).to_single_dict()
 
 
 def simulate_many(
@@ -222,74 +173,20 @@ def simulate_many(
     use_kernel: bool = False,
     timeit: bool = False,
 ) -> Dict:
-    """Batched multi-workload simulation: pack lanes from many workloads
-    (× SimConfigs) into ONE jitted scan instead of len(traces) sequential
-    compile+dispatch cycles (paper §3.3 batching, applied across programs).
-
-    params=None runs teacher-forced (per-workload totals then match
-    separate `simulate_trace` calls bit-exactly). ``n_lanes`` and
-    ``sim_cfg`` may be per-workload sequences. With timeit=True the packed
-    scan runs twice and throughput is measured on the second (compiled)
-    call, like `simulate`.
-    """
+    """Deprecated: use `SimNet.simulate_many`. Returns the legacy dict
+    shape; per-workload totals are unchanged (same packed scan)."""
+    _warn_deprecated("simulate_many", "SimNet.simulate_many")
     if params is not None and pcfg is None:
         raise ValueError("pcfg is required when params are given")
-    if sim_cfg is None:
-        sim_cfg = SimConfig(ctx_len=pcfg.ctx_len) if pcfg is not None else SimConfig()
-    arrs = [F.trace_arrays(t) for t in traces]
-    predict = make_predict_fn(params, pcfg, use_kernel=use_kernel) if params is not None else None
-    run = jax.jit(lambda: _simulate_many_core(arrs, predict, sim_cfg, n_lanes))
-    t0 = time.time()
-    res = run()
-    jax.block_until_ready(res["total_cycles"])
-    first_dt = dt = time.time() - t0  # one-shot cost: compile + run
-    if timeit:
-        t0 = time.time()
-        res = run()
-        jax.block_until_ready(res["total_cycles"])
-        dt = time.time() - t0
-    cycles = np.asarray(res["workload_cycles"], np.float64)
-    overflow = np.asarray(res["workload_overflow"])
-    n_instr = np.asarray(res["n_instructions"])
-    lanes_list = [n_lanes] * len(traces) if isinstance(n_lanes, int) else list(n_lanes)
-    workloads = []
-    for i, tr in enumerate(traces):
-        w = {
-            "name": tr.name,
-            "total_cycles": float(cycles[i]),
-            "cpi": float(cycles[i]) / int(n_instr[i]),
-            "n_instructions": int(n_instr[i]),
-            "n_lanes": int(lanes_list[i]),
-            "overflow": int(overflow[i]),
-        }
-        if tr.fetch_lat.any():
-            ref = tr.total_cycles
-            w["des_cycles"] = ref
-            w["des_cpi"] = ref / tr.n
-            w["cpi_error"] = abs(w["cpi"] - w["des_cpi"]) / w["des_cpi"]
-        workloads.append(w)
-    total_instr = int(n_instr.sum())
-    return {
-        "workloads": workloads,
-        "total_cycles": float(cycles.sum()),
-        "total_instructions": total_instr,
-        "n_workloads": len(traces),
-        "throughput_ips": total_instr / dt,
-        "seconds": dt,
-        "first_call_seconds": first_dt,
-    }
-
-
-def phase_cpis(trace: Trace, params, pcfg, sim_cfg=None, n_lanes=16, window=10000):
-    """Per-window CPI curves (paper Fig. 6): returns (simnet, des) arrays."""
-    sim_cfg = sim_cfg or SimConfig(ctx_len=pcfg.ctx_len)
-    arrs = F.trace_arrays(trace)
-    predict = make_predict_fn(params, pcfg)
-    res = jax.jit(lambda: simulate_trace(arrs, predict, sim_cfg, n_lanes))()
-    lats = np.asarray(res["outs"]["lats"])  # (per, L, 3)
-    fetch = np.swapaxes(lats[:, :, 0], 0, 1).reshape(-1)  # lane-major timeline
-    des_fetch = trace.fetch_lat[: len(fetch)]
-    k = len(fetch) // window
-    sim_cpi = fetch[: k * window].reshape(k, window).sum(1) / window
-    des_cpi = des_fetch[: k * window].reshape(k, window).sum(1) / window
-    return sim_cpi, des_cpi
+    if sim_cfg is None or isinstance(sim_cfg, SimConfig):
+        session_cfg, per_workload = sim_cfg, None
+    else:  # per-workload configs: size the engine for the widest context
+        per_workload = list(sim_cfg)
+        session_cfg = dataclasses.replace(
+            per_workload[0], ctx_len=max(c.ctx_len for c in per_workload)
+        )
+    sn = SimNet(params=params, pcfg=pcfg, sim_cfg=session_cfg, use_kernel=use_kernel)
+    res = sn.simulate_many(
+        traces, n_lanes=n_lanes, sim_cfgs=per_workload, timeit=timeit
+    )
+    return res.to_dict()

@@ -1,0 +1,387 @@
+"""The `SimNet` session: ONE object, ONE simulation path, typed results.
+
+The paper's deployment model (train-once / simulate-everywhere) as an API:
+a session owns a trained latency predictor (or runs teacher-forced without
+one) and routes EVERY simulation — single workload, multi-workload pack,
+design-space sweep — through the chunked / donated / mesh-shardable
+`serving.simnet_engine.SimNetEngine` pack path. There is no second wiring.
+
+    sn = SimNet.train(data, PredictorConfig(kind="c3"))   # or .from_artifact
+    sn.save("artifacts/models/c3")                        # PredictorArtifact
+    res   = sn.simulate(trace, n_lanes=64)                # SimResult, 1 workload
+    res   = sn.simulate_many(traces, n_lanes=8)           # SimResult, packed
+    swept = sn.sweep({"256kB": tr0, "4MB": tr1})          # SweepResult
+
+`repro.core.api` keeps the legacy loose-function signatures as thin
+deprecation shims over this class; `python -m repro` is the CLI face.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Mapping, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.artifact import PredictorArtifact
+from repro.core import features as F
+from repro.core.dataset import build_dataset
+from repro.core.predictor import (
+    PredictorConfig,
+    apply_raw,
+    decode_latency,
+    init_predictor,
+    split_heads,
+)
+from repro.core.results import SimResult, SweepResult, TrainResult, WorkloadResult
+from repro.core.simulator import SimConfig, max_packed_steps
+from repro.serving.simnet_engine import SimNetEngine
+from repro.training.optimizer import AdamConfig, adam_init, adam_update
+
+TraceLike = Any  # des.trace.Trace or a raw trace_arrays dict
+
+
+# ---------------------------------------------------------------------------
+# training loop (the raw machinery; SimNet.train is the public face)
+# ---------------------------------------------------------------------------
+
+def _hybrid_loss(raw, y, pcfg: PredictorConfig):
+    """Per-head hybrid CE+MSE (paper §2.4: CE for classification output,
+    squared error for regression). Regression in REG_SCALE space keeps the
+    two terms comparable (raw-cycle MSE would swamp the CE)."""
+    from repro.core.predictor import REG_SCALE
+
+    cls_logits, reg = split_heads(raw, pcfg)
+    y = y.astype(jnp.float32)
+    se = jnp.mean(jnp.square(reg - y * REG_SCALE))
+    if cls_logits is None:
+        return se
+    n_cls = pcfg.n_classes
+    t_int = jnp.clip(y, 0, None).astype(jnp.int32)
+    overflow = t_int >= (n_cls - 1)
+    target = jnp.where(overflow, n_cls - 1, t_int)
+    logp = jax.nn.log_softmax(cls_logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(target, n_cls, dtype=jnp.float32)
+    ce = -jnp.mean(jnp.sum(logp * onehot, axis=-1))
+    return ce + se
+
+
+def train_loop(
+    data: Dict[str, np.ndarray],
+    pcfg: PredictorConfig,
+    *,
+    epochs: int = 10,
+    batch_size: int = 512,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 0,
+) -> tuple:
+    """Adam training of a latency predictor. Returns (params, history);
+    params are the best-validation-loss snapshot."""
+    params, _ = init_predictor(jax.random.PRNGKey(seed), pcfg)
+    acfg = AdamConfig(lr=lr, clip_norm=1.0)
+    opt = adam_init(params)
+
+    def loss_fn(p, x, y):
+        raw = apply_raw(p, x, pcfg)
+        return _hybrid_loss(raw, y, pcfg)
+
+    @jax.jit
+    def step(p, opt, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, opt, _ = adam_update(grads, opt, p, acfg)
+        return p, opt, loss
+
+    @jax.jit
+    def eval_loss(p, x, y):
+        return loss_fn(p, x, y)
+
+    X, Y = data["train_x"], data["train_y"]
+    n = len(X)
+    rng = np.random.default_rng(seed)
+    history = {"train_loss": [], "val_loss": []}
+    best = (np.inf, params)
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        losses = []
+        for lo in range(0, n - batch_size + 1, batch_size):
+            idx = perm[lo : lo + batch_size]
+            x = jnp.asarray(X[idx], jnp.float32)
+            y = jnp.asarray(Y[idx])
+            params, opt, l = step(params, opt, x, y)
+            losses.append(float(l))
+        vl = []
+        for lo in range(0, len(data["val_x"]) - batch_size + 1, batch_size):
+            vl.append(float(eval_loss(
+                params,
+                jnp.asarray(data["val_x"][lo : lo + batch_size], jnp.float32),
+                jnp.asarray(data["val_y"][lo : lo + batch_size]),
+            )))
+        tl, vloss = float(np.mean(losses)), float(np.mean(vl)) if vl else float("nan")
+        history["train_loss"].append(tl)
+        history["val_loss"].append(vloss)
+        if vloss < best[0]:
+            best = (vloss, jax.tree_util.tree_map(lambda a: a.copy(), params))
+        if log_every and (ep % log_every == 0):
+            print(f"  epoch {ep}: train {tl:.4f} val {vloss:.4f}")
+    # no val batches (dataset smaller than one batch): the nan val loss
+    # never beats inf — return the final params, not the initial snapshot
+    return best[1] if best[0] < np.inf else params, history
+
+
+def prediction_errors(params, pcfg: PredictorConfig, X, Y, batch_size: int = 1024):
+    """Paper's per-latency-type error: E = |pred - y| / (y + 1), averaged."""
+    @jax.jit
+    def pred(x):
+        return decode_latency(apply_raw(params, x, pcfg), pcfg)
+
+    errs = []
+    for lo in range(0, len(X), batch_size):
+        x = jnp.asarray(X[lo : lo + batch_size], jnp.float32)
+        y = Y[lo : lo + batch_size]
+        p = np.asarray(pred(x))
+        errs.append(np.abs(p - y) / (y + 1.0))
+    e = np.concatenate(errs)
+    return {"fetch": float(e[:, 0].mean()), "execution": float(e[:, 1].mean()), "store": float(e[:, 2].mean())}
+
+
+# ---------------------------------------------------------------------------
+# session facade
+# ---------------------------------------------------------------------------
+
+class SimNet:
+    """A simulation session around one predictor (or teacher forcing).
+
+    Construction:
+      SimNet(artifact)                       reuse a loaded PredictorArtifact
+      SimNet(params=..., pcfg=...)           in-memory predictor
+      SimNet()                               teacher-forced (replay DES labels)
+      SimNet.from_artifact(path)             load a saved artifact
+      SimNet.train(data, pcfg, ...)          train, session owns the result
+
+    All simulate entry points share the engine's packed scan; ``mesh``
+    shards the lane axis, ``chunk`` bounds device memory for long traces.
+    """
+
+    def __init__(
+        self,
+        artifact: Optional[PredictorArtifact] = None,
+        *,
+        params=None,
+        pcfg: Optional[PredictorConfig] = None,
+        sim_cfg: Optional[SimConfig] = None,
+        mesh=None,
+        use_kernel: bool = False,
+        chunk: int = 1024,
+        train_result: Optional[TrainResult] = None,
+    ):
+        self._metadata: Dict[str, Any] = {}
+        if artifact is not None:
+            if params is not None or pcfg is not None:
+                raise ValueError("pass either an artifact or params/pcfg, not both")
+            params, pcfg = artifact.params, artifact.pcfg
+            sim_cfg = sim_cfg or artifact.sim_cfg
+            self._metadata = dict(artifact.metadata)  # keep saved provenance
+        if params is not None and pcfg is None:
+            raise ValueError("pcfg is required when params are given")
+        self.params = params
+        self.pcfg = pcfg
+        self.sim_cfg = sim_cfg or (
+            SimConfig(ctx_len=pcfg.ctx_len) if pcfg is not None else SimConfig()
+        )
+        self.chunk = chunk
+        self.train_result = train_result
+        self.engine = SimNetEngine(
+            params, pcfg, self.sim_cfg, mesh=mesh, use_kernel=use_kernel
+        )
+
+    def __repr__(self):
+        head = self.pcfg.kind if self.pcfg is not None else "teacher-forced"
+        return f"SimNet({head}, ctx_len={self.sim_cfg.ctx_len})"
+
+    # ------------------------------------------------------------ lifecycle
+
+    @classmethod
+    def from_artifact(cls, path, **kw) -> "SimNet":
+        return cls(PredictorArtifact.load(path), **kw)
+
+    @classmethod
+    def train(
+        cls,
+        data: Union[Mapping[str, np.ndarray], Sequence[TraceLike]],
+        pcfg: PredictorConfig,
+        sim_cfg: Optional[SimConfig] = None,
+        *,
+        epochs: int = 10,
+        batch_size: int = 512,
+        lr: float = 1e-3,
+        seed: int = 0,
+        log_every: int = 0,
+        eval_errors: bool = True,
+        **session_kw,
+    ) -> "SimNet":
+        """Train a predictor and return the session that owns it.
+
+        ``data``: a built dataset dict (train_x/... splits) or a sequence of
+        labelled Traces (the teacher-forced dataset is built on the fly).
+        """
+        sim_cfg = sim_cfg or SimConfig(ctx_len=pcfg.ctx_len)
+        if not isinstance(data, Mapping):
+            data = build_dataset(list(data), sim_cfg)
+        t0 = time.time()
+        params, history = train_loop(
+            data, pcfg, epochs=epochs, batch_size=batch_size, lr=lr,
+            seed=seed, log_every=log_every,
+        )
+        errs = None
+        if eval_errors and "test_x" in data and len(data["test_x"]):
+            errs = prediction_errors(params, pcfg, data["test_x"], data["test_y"])
+        result = TrainResult(
+            kind=pcfg.kind,
+            output=pcfg.output,
+            ctx_len=pcfg.ctx_len,
+            epochs=epochs,
+            n_train=len(data["train_x"]),
+            train_loss=tuple(history["train_loss"]),
+            val_loss=tuple(history["val_loss"]),
+            seconds=time.time() - t0,
+            pred_errors=errs,
+        )
+        return cls(
+            params=params, pcfg=pcfg, sim_cfg=sim_cfg,
+            train_result=result, **session_kw,
+        )
+
+    @property
+    def artifact(self) -> PredictorArtifact:
+        if self.params is None:
+            raise ValueError("teacher-forced session has no predictor to export")
+        meta = dict(self._metadata)  # provenance carried from a loaded artifact
+        if self.train_result is not None:
+            meta["train"] = self.train_result.to_dict()
+        return PredictorArtifact(
+            params=self.params, pcfg=self.pcfg, sim_cfg=self.sim_cfg, metadata=meta
+        )
+
+    def save(self, path, metadata: Optional[Mapping[str, Any]] = None):
+        """Write this session's predictor as a PredictorArtifact directory."""
+        art = self.artifact
+        if metadata:
+            art = PredictorArtifact(
+                art.params, art.pcfg, art.sim_cfg, {**art.metadata, **metadata}
+            )
+        return art.save(path)
+
+    # ----------------------------------------------------------- simulation
+
+    def simulate_many(
+        self,
+        traces: Sequence[TraceLike],
+        n_lanes: Union[int, Sequence[int]] = 8,
+        *,
+        sim_cfgs: Union[SimConfig, Sequence[SimConfig], None] = None,
+        chunk: Optional[int] = None,
+        timeit: bool = False,
+    ) -> SimResult:
+        """Pack all workloads onto one lane axis and run THE simulation path
+        (chunked jitted scan, donated state, mesh-sharded lanes).
+
+        ``traces`` are labelled `des.trace.Trace` objects (DES comparison
+        fields filled in) or raw trace_arrays dicts. ``n_lanes`` and
+        ``sim_cfgs`` may be per-workload. timeit=True re-streams the pack
+        once compiled so throughput is steady-state.
+        """
+        traces = list(traces)
+        if not traces:
+            raise ValueError("simulate_many needs at least one workload")
+        arrs = [t if isinstance(t, dict) else F.trace_arrays(t) for t in traces]
+        lanes = [n_lanes] * len(traces) if isinstance(n_lanes, int) else list(n_lanes)
+        # shrink the streaming chunk to the pack's own length so short packs
+        # don't pay for pad-to-chunk inactive steps
+        eff_chunk = max(1, min(chunk or self.chunk, max_packed_steps(arrs, lanes)))
+        res = self.engine.simulate_many(
+            arrs, n_lanes=lanes, chunk=eff_chunk, cfgs=sim_cfgs, timeit=timeit
+        )
+        workloads = []
+        for i, t in enumerate(traces):
+            cycles = float(res["workload_cycles"][i])
+            n = int(res["n_instructions"][i])
+            kw: Dict[str, Any] = {}
+            ref_lat = getattr(t, "fetch_lat", None)
+            if ref_lat is not None and ref_lat.any():
+                ref = t.total_cycles
+                des_cpi = ref / t.n
+                kw = {
+                    "des_cycles": ref,
+                    "des_cpi": des_cpi,
+                    "cpi_error": abs(cycles / n - des_cpi) / des_cpi,
+                }
+            workloads.append(WorkloadResult(
+                name=getattr(t, "name", f"workload{i}"),
+                total_cycles=cycles,
+                cpi=cycles / n,
+                n_instructions=n,
+                n_lanes=int(lanes[i]),
+                overflow=int(res["workload_overflow"][i]),
+                **kw,
+            ))
+        return SimResult(
+            workloads=tuple(workloads),
+            total_cycles=float(res["total_cycles"]),
+            total_instructions=int(res["total_instructions"]),
+            throughput_ips=float(res["throughput_ips"]),
+            seconds=float(res["seconds"]),
+            first_call_seconds=float(res["first_call_seconds"]),
+        )
+
+    def simulate(
+        self,
+        trace: TraceLike,
+        n_lanes: int = 16,
+        *,
+        chunk: Optional[int] = None,
+        timeit: bool = True,
+    ) -> SimResult:
+        """Single-workload simulation = the 1-workload pack (same path)."""
+        return self.simulate_many(
+            [trace], n_lanes=n_lanes, chunk=chunk, timeit=timeit
+        )
+
+    def sweep(
+        self,
+        jobs: Union[Mapping[str, Any], Sequence[tuple]],
+        n_lanes: Union[int, Sequence[int]] = 8,
+        *,
+        chunk: Optional[int] = None,
+        timeit: bool = False,
+    ) -> SweepResult:
+        """Design-space sweep: every point's workloads ride ONE packed call.
+
+        ``jobs``: mapping label → trace (or sequence of traces), or a
+        sequence of (label, trace) / (label, trace, SimConfig) tuples — the
+        3-tuple form sweeps processor SimConfigs (ctx_len / retire_width)
+        without retraining, the paper's §5 use case. Workload names must be
+        unique within a point (they key the relative-accuracy readout).
+        """
+        labels, traces, cfgs = [], [], []
+        any_cfg = False
+        if isinstance(jobs, Mapping):
+            items = []
+            for label, t in jobs.items():
+                ts = t if isinstance(t, (list, tuple)) else [t]
+                items.extend((label, x) for x in ts)
+        else:
+            items = list(jobs)
+        for job in items:
+            label, t = job[0], job[1]
+            cfg = job[2] if len(job) > 2 else None
+            any_cfg = any_cfg or cfg is not None
+            labels.append(label)
+            traces.append(t)
+            cfgs.append(cfg if cfg is not None else self.sim_cfg)
+        res = self.simulate_many(
+            traces, n_lanes=n_lanes,
+            sim_cfgs=cfgs if any_cfg else None, chunk=chunk, timeit=timeit,
+        )
+        return SweepResult(labels=tuple(labels), result=res)

@@ -407,6 +407,19 @@ def pack_workloads(
     )
 
 
+def max_packed_steps(
+    trace_arrays_list: Sequence[dict], n_lanes: Union[int, Sequence[int]]
+) -> int:
+    """Longest per-lane sub-trace over a prospective pack (= the packed time
+    axis before pad_to rounding). The session uses this to shrink the
+    streaming chunk for small packs so padding stays negligible."""
+    W = len(trace_arrays_list)
+    lanes = [n_lanes] * W if isinstance(n_lanes, int) else list(n_lanes)
+    return max(
+        int(a["feat"].shape[0]) // ln for a, ln in zip(trace_arrays_list, lanes)
+    )
+
+
 def workload_totals(state: SimState, packed: PackedWorkloads):
     """Per-workload (cycles, overflow) via segment_sum over the lane axis."""
     lane_total = state.cur_tick + drain_cycles(state)

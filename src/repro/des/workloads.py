@@ -217,6 +217,10 @@ SIM_BENCHMARKS: Dict[str, Callable[[int], Program]] = {
     "sim_stream2": lambda T: gen_stream(T, seed=11, stride=128, working_set=1 << 23),
     "sim_compute2": lambda T: gen_compute(T, seed=12, chain_len=8, fp_ratio=0.9),
     "sim_chase": lambda T: gen_pointer_chase(T, seed=13),
+    # 2MB working set straddles the Table 5 L2 sweep (256KB < ws ≤ 4MB), so
+    # swept sizes actually change the hit rate — 16MB thrashes every size
+    # and 256KB fits in all of them (both give size-independent cycles)
+    "sim_chase_mid": lambda T: gen_pointer_chase(T, seed=21, working_set=1 << 21),
     "sim_chase_small": lambda T: gen_pointer_chase(T, seed=14, working_set=1 << 18),
     "sim_branchy_hard": lambda T: gen_branchy(T, seed=15, predictability=0.3),
     "sim_branchy_easy": lambda T: gen_branchy(T, seed=16, predictability=0.95),

@@ -1,0 +1,160 @@
+"""SimNet session API: engine-only routing must reproduce the legacy
+results exactly, typed results must serialize, shims must warn.
+
+The bit-identity tests are the regression guard for the api_redesign:
+`SimNet.simulate*` routes exclusively through the chunked SimNetEngine
+pack path, and its totals must equal the one-shot core scan's.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import api, features as F
+from repro.core.api import SimNet
+from repro.core.results import SimResult, SweepResult, WorkloadResult
+from repro.core.simulator import SimConfig, simulate_many as core_simulate_many
+from repro.des.o3 import O3Config, O3Simulator
+from repro.des.workloads import get_benchmark
+
+STYLES = ["mlb_stream", "mlb_compute", "sim_loop", "mlb_branchy"]
+SIZES = [3000, 2500, 2000, 3500]  # ragged on purpose
+
+
+@pytest.fixture(scope="module")
+def traces():
+    sim = O3Simulator(O3Config())
+    return [sim.run(get_benchmark(n, s)) for n, s in zip(STYLES, SIZES)]
+
+
+@pytest.fixture(scope="module")
+def arrs(traces):
+    return [F.trace_arrays(t) for t in traces]
+
+
+def test_session_totals_bit_identical_to_core(traces, arrs):
+    """Teacher-forced pack through the session (engine path) vs the
+    one-shot core scan: totals must be bit-identical, not just close."""
+    cfg = SimConfig(ctx_len=32)
+    lanes = [4, 2, 8, 4]
+    sn = SimNet(sim_cfg=cfg)
+    res = sn.simulate_many(traces, n_lanes=lanes)
+    ref = core_simulate_many(arrs, None, cfg, n_lanes=lanes)
+    for i, w in enumerate(res):
+        assert w.total_cycles == float(ref["workload_cycles"][i])
+        assert w.n_instructions == int(ref["n_instructions"][i])
+        assert w.overflow == int(ref["workload_overflow"][i])
+    assert res.total_cycles == float(ref["total_cycles"])
+
+
+def test_session_heterogeneous_cfgs_bit_identical(traces, arrs):
+    """Per-workload SimConfigs through the session replay each job's own
+    config exactly inside the shared engine scan."""
+    cfgs = [
+        SimConfig(ctx_len=16, retire_width=2),
+        SimConfig(ctx_len=32, retire_width=8),
+        SimConfig(ctx_len=8, retire_width=4),
+        SimConfig(ctx_len=32, retire_width=1),
+    ]
+    sn = SimNet(sim_cfg=SimConfig(ctx_len=32))
+    res = sn.simulate_many(traces, n_lanes=4, sim_cfgs=cfgs)
+    ref = core_simulate_many(arrs, None, cfgs, n_lanes=4)
+    for i, w in enumerate(res):
+        assert w.total_cycles == float(ref["workload_cycles"][i])
+        assert w.overflow == int(ref["workload_overflow"][i])
+
+
+def test_legacy_dict_path_unchanged(traces):
+    """The deprecated api.simulate_many shim returns the legacy dict shape
+    with totals bit-identical to the session result it wraps."""
+    sn = SimNet()
+    res = sn.simulate_many(traces, n_lanes=1)
+    with pytest.deprecated_call():
+        legacy = api.simulate_many(traces, n_lanes=1)
+    assert legacy == res.to_dict() | {
+        # timing fields are measured per call — compare everything else
+        k: legacy[k] for k in ("throughput_ips", "seconds", "first_call_seconds")
+    }
+    for tr, w in zip(traces, legacy["workloads"]):
+        assert w["total_cycles"] == tr.total_cycles  # golden Eq. 1 cycles
+        assert w["cpi_error"] == 0.0
+
+
+def test_legacy_simulate_shim_single_workload(loop_trace):
+    with pytest.deprecated_call():
+        d = api.simulate(loop_trace, None, None, SimConfig(ctx_len=16), n_lanes=1)
+    assert d["total_cycles"] == loop_trace.total_cycles
+    assert set(d) >= {"total_cycles", "cpi", "n_instructions", "n_lanes",
+                      "throughput_ips", "seconds", "overflow", "des_cpi"}
+
+
+def test_results_are_frozen_and_json_ready(traces):
+    sn = SimNet()
+    res = sn.simulate_many(traces[:2], n_lanes=2)
+    assert isinstance(res, SimResult) and isinstance(res[0], WorkloadResult)
+    with pytest.raises(Exception):
+        res.workloads[0].cpi = 0.0  # frozen dataclass
+    payload = json.loads(json.dumps(res.to_dict()))
+    assert payload["n_workloads"] == 2
+    assert res.workload(traces[0].name).name == traces[0].name
+    with pytest.raises(KeyError):
+        res.workload("no_such_workload")
+
+
+def test_sweep_one_pack_and_relative(traces):
+    """A sweep rides one packed call; relative() reads per-benchmark
+    speedups vs the baseline point from both SimNet and DES sides."""
+    sn = SimNet()
+    tr = traces[2]
+    swept = sn.sweep([("base", tr), ("alt", tr)], n_lanes=2)
+    assert isinstance(swept, SweepResult)
+    assert swept.points == ("base", "alt")
+    rel = swept.relative()
+    cell = rel["alt"][tr.name]
+    # same trace at both points → speedup exactly 1 on both sides
+    assert cell["simnet"] == 1.0 and cell["des"] == 1.0
+    json.dumps(swept.to_dict())
+
+
+def test_sweep_with_sim_cfg_axis(traces):
+    """(label, trace, SimConfig) jobs sweep processor configs without
+    retraining; each point matches a standalone run of that config."""
+    from repro.core.simulator import simulate_trace
+
+    tr = traces[2]
+    a = F.trace_arrays(tr)
+    cfg_small = SimConfig(ctx_len=8, retire_width=2)
+    cfg_big = SimConfig(ctx_len=32, retire_width=8)
+    sn = SimNet(sim_cfg=SimConfig(ctx_len=32))
+    swept = sn.sweep(
+        [("narrow", tr, cfg_small), ("wide", tr, cfg_big)], n_lanes=4
+    )
+    for label, cfg in [("narrow", cfg_small), ("wide", cfg_big)]:
+        ref = simulate_trace(a, None, cfg, 4)
+        assert swept.point(label)[0].total_cycles == float(ref["total_cycles"])
+
+
+def test_cli_sweep_smoke(capsys):
+    """`python -m repro sweep --quick` (the CI dry-run): teacher-forced
+    replay through the full CLI → session → engine → results stack."""
+    from repro.cli import main
+
+    rc = main(["sweep", "--quick", "--bench", "sim_loop", "-n", "2000",
+               "--lanes", "2", "--points", "262144", "1048576"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["mode"] == "teacher-forced"
+    workloads = out["sweep"]["result"]["workloads"]
+    assert len(workloads) == 2
+    assert all(w["cpi_error"] is not None for w in workloads)
+
+
+def test_cli_trace_smoke(tmp_path, capsys):
+    from repro.cli import main
+
+    rc = main(["trace", "--bench", "sim_loop", "-n", "2000",
+               "--cache-dir", str(tmp_path)])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["traces"][0]["n_instructions"] == 2000
+    assert list(tmp_path.glob("*.npz"))  # cached for the next command
