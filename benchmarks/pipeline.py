@@ -16,7 +16,8 @@ Artifacts (artifacts/simnet/):
   fig56_cpi.json           per-benchmark CPIs + phase curves (Figs. 5, 6)
   fig7_subtrace.json       parallel-lane error vs sub-trace size (Fig. 7)
   fig89_throughput.json    throughput vs lanes + DES baseline (Figs. 8, 9)
-  packed_throughput.json   batched multi-workload engine: packed vs sequential
+  packed_throughput.json   batched engine: packed vs sequential + SimServe
+                           zoo sweep (compile-cache hits/misses/seconds)
   table5_usecases.json     design-space relative accuracy (Table 5 / §5)
   a64fx.json               second-processor-config accuracy (§4.1)
 """
@@ -227,7 +228,7 @@ def step_fig89(data, quick):
     O3Simulator(O3Config()).run(prog)
     out["des_ips"] = 20000 / (time.time() - t0)
     for lanes in ([4, 16, 64, 256] if not quick else [4, 16]):
-        res = sn.simulate(tr, n_lanes=lanes)  # timeit: steady-state IPS
+        res = sn.simulate(tr, n_lanes=lanes, timeit=True)  # steady-state IPS
         out["points"].append({"lanes": lanes, "ips": float(res.throughput_ips)})
         print(f"[pipeline] fig89 lanes={lanes}: {res.throughput_ips:.0f} IPS", flush=True)
     _save_json("fig89_throughput.json", out)
@@ -282,33 +283,48 @@ def step_table5(data, quick):
 
 def step_throughput(data, quick):
     """Packed vs sequential execution of the same workload set (the batched
-    multi-workload engine's headline number: instructions/sec both ways)."""
+    multi-workload engine's headline number: instructions/sec both ways),
+    plus the SimServe readout: a zoo sweep where every same-architecture
+    model reuses ONE resident executable (cache hits ≥ misses) instead of
+    paying per-model first_call compiles."""
     if _exists("packed_throughput.json"):
         return
+    from repro.core.api import SimServe
+    from repro.serving.compile_cache import CompileCache
+
     art = load_session("c3_hybrid").artifact
     traces = (data["ml_eval"] + data["sim_traces"])[: 6 if quick else 12]
     lanes = 8
-    # sequential: a fresh engine per workload — one compile+dispatch cycle
-    # each, the pre-packing pipeline behaviour (and the serialization the
-    # batched engine's motivation calls out)
+    # sequential: a fresh engine per workload, each on its own COLD cache —
+    # one compile+dispatch cycle per workload, the pre-SimServe pipeline
+    # behaviour (per-session jit wrappers, exact-length chunks that never
+    # matched — the serialization the batched engine's motivation calls out)
+    seq_caches = [CompileCache() for _ in traces]
     t0 = time.time()
-    seq = [SimNet(art).simulate(tr, n_lanes=lanes, timeit=True) for tr in traces]
+    seq = [SimNet(art, cache=c).simulate(tr, n_lanes=lanes, timeit=True)
+           for tr, c in zip(traces, seq_caches)]
     seq_run = sum(r.seconds for r in seq)  # compiled-call time only
     # timeit executes each compiled pass twice (warmup + timed); subtract
     # the timed re-runs so the baseline is an honest single pass
     # (compile + one execution per workload), same shape as the packed side
     seq_wall = (time.time() - t0) - seq_run
     n_seq = sum(r.total_instructions for r in seq)
-    many = SimNet(art).simulate_many(traces, n_lanes=lanes, timeit=True)
+    packed_cache = CompileCache()
+    many = SimNet(art, cache=packed_cache).simulate_many(
+        traces, n_lanes=lanes, timeit=True
+    )
     out = {
         "n_workloads": len(traces),
         "lanes_per_workload": lanes,
         "sequential": {"ips": n_seq / seq_run, "seconds": seq_run,
                        "wall_seconds": seq_wall,  # per-call compiles + 1 run each
-                       "n_instructions": n_seq},
+                       "n_instructions": n_seq,
+                       "cache": {k: sum(c.stats()[k] for c in seq_caches) for k in
+                                 ("hits", "misses", "compile_seconds")}},
         "packed": {"ips": many.throughput_ips, "seconds": many.seconds,
                    "wall_seconds": many.first_call_seconds,  # one compile+run
-                   "n_instructions": many.total_instructions},
+                   "n_instructions": many.total_instructions,
+                   "cache": dict(many.cache)},
         # headline: whole-sweep wall clock, packed vs one-call-per-workload
         "speedup_wall": seq_wall / many.first_call_seconds,
         # steady state: compiled call vs compiled call
@@ -317,6 +333,54 @@ def step_throughput(data, quick):
     print(f"[pipeline] throughput: sequential {out['sequential']['ips']:.0f} IPS, "
           f"packed {out['packed']['ips']:.0f} IPS "
           f"({out['speedup_wall']:.2f}x wall, {out['speedup_steady']:.2f}x steady)",
+          flush=True)
+
+    # --- SimServe zoo sweep: executable reuse instead of per-model -------
+    # first_call compiles. Wave 1 makes each distinct architecture's
+    # executable resident (one compile each — same-shape models share);
+    # wave 2 is the steady-traffic readout: every batch is a cache hit.
+    zoo_ids = [model_id(k, o) for k, o, _ in ZOO
+               if k not in SLOW_KINDS and k != "ithemal_lstm2"]
+    serve_cache = CompileCache()
+    serve = SimServe(cache=serve_cache)
+    resident = []
+    for mid in zoo_ids:
+        path = ART / "models" / mid
+        if PredictorArtifact.exists(path):
+            serve.register(mid, str(path))
+            resident.append(mid)
+    serve_traces = traces[: 3 if quick else 6]
+    waves = []
+    t0 = time.time()
+    for wave in range(2):
+        tw = time.time()
+        for mid in resident:
+            for tr in serve_traces:
+                serve.submit(tr, mid, n_lanes=lanes)
+        n_before = len(serve.batches)
+        serve.drain()
+        waves.append({
+            "wall_seconds": time.time() - tw,
+            "per_model_first_call_seconds": {
+                b.model_id: b.first_call_seconds
+                for b in serve.batches[n_before:]
+            },
+        })
+    serve_wall = time.time() - t0
+    st = serve.stats()
+    out["serve_zoo"] = {
+        "models": resident,
+        "n_workloads": len(serve_traces),
+        "n_jobs": st["jobs_completed"],
+        "wall_seconds": serve_wall,
+        "batches": st["batches"],
+        "jobs_per_batch": st["jobs_per_batch"],
+        "waves": waves,
+        "cache": {k: st["cache"][k] for k in ("hits", "misses", "compile_seconds")},
+        "executables": st["cache"]["executables"],
+    }
+    print(f"[pipeline] serve_zoo: {st['jobs_completed']} jobs over {len(resident)} "
+          f"resident models in {serve_wall:.1f}s — cache {out['serve_zoo']['cache']}",
           flush=True)
     _save_json("packed_throughput.json", out)
 

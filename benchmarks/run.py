@@ -140,6 +140,29 @@ def throughput():
           f"(steady-state, compiled vs compiled: {data['speedup_steady']:.2f}x)")
     CSV_ROWS.append(("throughput/sequential", 1e6 / seq["ips"], None))
     CSV_ROWS.append(("throughput/packed", 1e6 / packed["ips"], data["speedup_wall"]))
+    for side in ("sequential", "packed"):
+        c = data[side].get("cache")
+        if c:
+            print(f"  {side} compile cache: {c['misses']} compiles "
+                  f"({c['compile_seconds']:.2f}s), {c['hits']} hits")
+            CSV_ROWS.append((f"throughput/{side}_compile_s", 0.0, c["compile_seconds"]))
+    zoo = data.get("serve_zoo")
+    if zoo:
+        c = zoo["cache"]
+        print(f"  SimServe zoo sweep: {zoo['n_jobs']} jobs over "
+              f"{len(zoo['models'])} resident models × {zoo['n_workloads']} workloads "
+              f"in {zoo['wall_seconds']:.1f}s ({zoo['batches']} shared batches)")
+        print(f"    compile cache: {c['misses']} misses / {c['hits']} hits, "
+              f"{c['compile_seconds']:.2f}s total compile "
+              f"(executable reuse — wave 2 pays zero compiles)")
+        for i, wave in enumerate(zoo.get("waves", [])):
+            fc = wave["per_model_first_call_seconds"]
+            rng = (f", per-model first_call {min(fc.values()):.2f}–"
+                   f"{max(fc.values()):.2f}s" if fc else " (no resident models)")
+            print(f"    wave {i}: {wave['wall_seconds']:6.2f}s wall{rng}")
+        CSV_ROWS.append(("serve_zoo/cache_hits", 0.0, c["hits"]))
+        CSV_ROWS.append(("serve_zoo/cache_misses", 0.0, c["misses"]))
+        CSV_ROWS.append(("serve_zoo/compile_seconds", 0.0, c["compile_seconds"]))
 
 
 def table5():

@@ -2,7 +2,8 @@
 retraining — only the lightweight history-context simulation changes; the
 trained predictor is reused as-is via `SimNet.sweep`.
 
-  PYTHONPATH=src python examples/design_space.py
+  PYTHONPATH=src:. python examples/design_space.py   # repo root on path
+                                                     # (examples/ is a package)
 
 CLI equivalent (predictor mode needs a saved artifact):
 

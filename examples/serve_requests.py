@@ -1,0 +1,73 @@
+"""SimServe: many concurrent simulation requests, resident predictors,
+one compile.
+
+A stream of requests — different benchmarks, different lane counts,
+different clients, some against the trained predictor and some
+teacher-forced — lands on ONE resident service. The scheduler
+continuously packs compatible pending jobs into shared lane batches per
+resident model (lane counts bucket to powers of two, dead lanes are
+masked), and the compile cache keys executables by architecture, never
+weights, so the whole mix runs on a couple of compiled programs.
+
+  PYTHONPATH=src:. python examples/serve_requests.py   # repo root on path
+                                                       # (examples/ is a package)
+
+CLI equivalent (batch mode, JSON in/out):
+
+  python -m repro serve --jobs jobs.json
+"""
+import time
+
+from examples.simulate_workload import get_session
+from repro.core import api
+from repro.core.api import SimServe
+
+REQUESTS = [  # (client, benchmark, n_instructions, lanes, use_predictor)
+    ("alice", "sim_loop", 8000, 4, True),
+    ("bob", "mlb_stream", 6000, 2, True),
+    ("carol", "sim_branchy_easy", 7000, 8, True),
+    ("dave", "mlb_compute", 6000, 4, False),  # label replay, no predictor
+    ("erin", "mlb_mixed", 9000, 4, True),
+    ("frank", "sim_stream2", 5000, 2, False),
+]
+
+
+def main():
+    sn = get_session()  # trained artifact (train-once / serve-everyone)
+    serve = SimServe()
+    serve.register("c3", sn.artifact)
+
+    traces = {name: api.generate_traces([name], n, cache_dir="artifacts/traces")[0]
+              for _, name, n, _, _ in REQUESTS}
+
+    print(f"== submitting {len(REQUESTS)} requests from "
+          f"{len({c for c, *_ in REQUESTS})} clients ==")
+    handles = []
+    for client, bench, n, lanes, pred in REQUESTS:
+        h = serve.submit(traces[bench], "c3" if pred else None,
+                         n_lanes=lanes, name=f"{client}/{bench}")
+        handles.append(h)
+
+    t0 = time.time()
+    serve.drain()
+    wall = time.time() - t0
+
+    print(f"== drained in {wall:.2f}s ==")
+    for h in handles:
+        w = h.result()
+        err = f", CPI err vs DES {100*w.cpi_error:.1f}%" if w.cpi_error is not None else ""
+        print(f"  {w.name:24s} model={h.model_id:14s} "
+              f"{w.total_cycles:9.0f} cycles, CPI {w.cpi:.3f}{err}")
+
+    st = serve.stats()
+    print(f"== service stats ==")
+    print(f"  {st['jobs_completed']} jobs in {st['batches']} shared batches "
+          f"({st['jobs_per_batch']:.1f} jobs/batch), "
+          f"{st['lanes_live']}/{st['lanes_dispatched']} lanes live (rest = bucketing)")
+    c = st["cache"]
+    print(f"  compile cache: {c['misses']} compiles ({c['compile_seconds']:.2f}s), "
+          f"{c['hits']} hits — resident executables: {list(c['executables'])}")
+
+
+if __name__ == "__main__":
+    main()

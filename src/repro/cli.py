@@ -10,6 +10,9 @@ compose with jq / CI checks.
   sweep     design-space sweep (L2 sizes or branch predictors) in one pack;
             without --artifact it replays DES labels teacher-forced through
             the same engine path (fast structural dry-run, used by CI)
+  serve     batch-mode SimServe: read a JSON job file (many jobs × many
+            resident models), continuously pack the jobs into shared lane
+            batches per model, emit per-job results + service/cache stats
   bench     packed-vs-sequential engine microbenchmark
 
 Train once, simulate anywhere:
@@ -21,6 +24,16 @@ Train once, simulate anywhere:
 
 The second process reloads the artifact and reproduces the first one's
 CPI exactly (params round-trip bit-identically).
+
+Serve a job file (jobs without "model" replay teacher-forced; all jobs
+against one resident model share lane batches and compiled executables):
+
+  python -m repro serve --jobs jobs.json
+  # jobs.json:
+  # {"models": {"c3": "artifacts/models/cli_c3"},
+  #  "jobs": [{"id": "a", "model": "c3", "bench": "sim_loop", "n": 4000},
+  #           {"id": "b", "model": "c3", "bench": "mlb_mixed", "lanes": 4},
+  #           {"id": "tf", "bench": "sim_loop", "n": 2000}]}
 """
 from __future__ import annotations
 
@@ -28,12 +41,14 @@ import argparse
 import json
 import sys
 import time
+from pathlib import Path
 
 from repro.core import api
 from repro.core.predictor import PredictorConfig
 from repro.core.session import SimNet
 from repro.core.simulator import SimConfig
 from repro.des.o3 import A64FX_CONFIG, O3Config
+from repro.serving.service import SimServe
 
 O3_CONFIGS = {"default": None, "a64fx": A64FX_CONFIG}
 
@@ -137,16 +152,56 @@ def cmd_sweep(args) -> int:
     return 0
 
 
+def cmd_serve(args) -> int:
+    """Batch-mode service: load the job file's models once as residents,
+    submit every job, drain (continuous batching per resident model), and
+    emit per-job results plus batch/cache statistics."""
+    spec = json.loads(Path(args.jobs).read_text())
+    serve = SimServe(chunk=args.chunk)
+    for mid, path in (spec.get("models") or {}).items():
+        serve.register(mid, path)
+    handles = []
+    trace_memo = {}  # jobs repeating a (bench, n, o3) cell share one DES run
+    for i, job in enumerate(spec.get("jobs", [])):
+        bench = job.get("bench") or (args.bench[0] if args.bench else "sim_loop")
+        n = int(job.get("n", args.n))
+        tkey = (bench, n, job.get("o3", args.o3))
+        if tkey not in trace_memo:
+            trace_memo[tkey] = _gen_traces([tkey[0]], n, tkey[2], args.cache_dir)[0]
+        tr = trace_memo[tkey]
+        h = serve.submit(
+            tr, job.get("model"),
+            n_lanes=int(job.get("lanes", args.lanes)),
+            name=job.get("id") or f"job{i}",
+        )
+        handles.append((job.get("id") or f"job{i}", job.get("model"), h))
+    serve.drain()
+    _emit({
+        "jobs": [
+            {"id": jid, "model": mid, "result": h.result().to_dict()}
+            for jid, mid, h in handles
+        ],
+        "batches": [b.to_dict() for b in serve.batches],
+        "stats": serve.stats(),
+    })
+    return 0
+
+
 def cmd_bench(args) -> int:
     """Packed-vs-sequential: W workloads through one packed engine call vs
-    one freshly-compiled engine per workload (the pre-packing behaviour)."""
+    one freshly-compiled engine per workload (the pre-packing behaviour —
+    each sequential call gets its own COLD cache, otherwise it would
+    free-ride on the shared executable cache it predates)."""
+    from repro.serving.compile_cache import CompileCache
+
     n = 3000 if args.quick else args.n
     names = args.bench or ["mlb_stream", "mlb_compute", "sim_loop", "mlb_branchy"]
     traces = _gen_traces(names, n, args.o3, args.cache_dir)
     art = SimNet.from_artifact(args.artifact).artifact if args.artifact else None
 
     def fresh():
-        return SimNet(art) if art else SimNet()
+        cache = CompileCache()
+        return SimNet(art, cache=cache) if art else SimNet(cache=cache)
 
     t0 = time.time()
     seq = [fresh().simulate(t, n_lanes=args.lanes, timeit=False) for t in traces]
@@ -220,6 +275,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--points", nargs="+", default=None,
                    help="design points: l2 sizes in bytes, or bpred names")
     p.set_defaults(fn=cmd_sweep, bench_default=["sim_chase_mid"])
+
+    p = sub.add_parser("serve", help="batch-mode SimServe over a JSON job file")
+    _common(p)
+    p.add_argument("--jobs", required=True,
+                   help='JSON job file: {"models": {id: artifact_dir}, '
+                        '"jobs": [{"id", "model", "bench", "n", "lanes", "o3"}]}')
+    p.add_argument("--chunk", type=int, default=1024,
+                   help="streaming chunk cap (bucketed per batch)")
+    p.set_defaults(fn=cmd_serve)
 
     p = sub.add_parser("bench", help="packed vs sequential throughput microbench")
     _common(p, n_default=6000)

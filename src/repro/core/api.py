@@ -25,45 +25,44 @@ the same chunked / donated / mesh-shardable engine pack path.
     swept = sn.sweep({"256kB": tr0, "4MB": tr1})  # SweepResult, one pack
 
 Results are frozen dataclasses (`repro.core.results`) with `.to_dict()`
-for JSON. The same flow is scriptable end-to-end via the CLI:
+for JSON. Serving many concurrent requests / many resident models is
+`SimServe` (`repro.serving.service`): a session is just a service with one
+client. The same flows are scriptable end-to-end via the CLI:
 
     python -m repro trace --bench mlb_mixed -n 20000
     python -m repro train --bench mlb_mixed mlb_branchy --artifact m/c3
     python -m repro simulate --artifact m/c3 --bench sim_loop
     python -m repro sweep --artifact m/c3 --bench sim_chase
+    python -m repro serve --jobs jobs.json
 
-Legacy surface: `simulate` / `simulate_many` / `train_predictor` below keep
-their pre-session signatures for one release as thin deprecation shims that
-return the old dict shapes (`SimResult.to_dict()` is exactly that shape).
 `generate_traces`, `build_training_data`, `prediction_errors` and
-`phase_cpis` are not deprecated — they are the data-side helpers.
+`phase_cpis` are the data-side helpers. (The pre-session loose functions
+`simulate` / `simulate_many` / `train_predictor` completed their one
+deprecation release and are gone — use the session / service methods.)
 """
 from __future__ import annotations
 
-import dataclasses
-import warnings
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core import features as F
 from repro.core.dataset import build_dataset
-from repro.core.predictor import PredictorConfig, make_predict_fn
+from repro.core.predictor import make_predict_fn
 from repro.core.results import SimResult, SweepResult, TrainResult, WorkloadResult
-from repro.core.session import SimNet, prediction_errors, train_loop
+from repro.core.session import SimNet, prediction_errors
 from repro.core.simulator import SimConfig, simulate_trace
 from repro.des.o3 import O3Config, O3Simulator
 from repro.des.trace import Trace
 from repro.des.workloads import get_benchmark
+from repro.serving.service import SimServe
 
 __all__ = [
-    "SimNet",
+    "SimNet", "SimServe",
     "SimResult", "SweepResult", "TrainResult", "WorkloadResult",
     "generate_traces", "build_training_data", "prediction_errors", "phase_cpis",
-    # deprecated shims
-    "train_predictor", "simulate", "simulate_many",
 ]
 
 
@@ -114,79 +113,3 @@ def phase_cpis(trace: Trace, params, pcfg, sim_cfg=None, n_lanes=16, window=1000
     sim_cpi = fetch[: k * window].reshape(k, window).sum(1) / window
     des_cpi = des_fetch[: k * window].reshape(k, window).sum(1) / window
     return sim_cpi, des_cpi
-
-
-# ---------------------------------------------------------------------------
-# deprecated loose-function surface (one release of compatibility)
-# ---------------------------------------------------------------------------
-
-def _warn_deprecated(old: str, new: str):
-    warnings.warn(
-        f"repro.core.api.{old} is deprecated; use {new} (repro.core.session)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def train_predictor(
-    data: Dict[str, np.ndarray],
-    pcfg: PredictorConfig,
-    *,
-    epochs: int = 10,
-    batch_size: int = 512,
-    lr: float = 1e-3,
-    seed: int = 0,
-    log_every: int = 0,
-) -> tuple:
-    """Deprecated: use `SimNet.train`. Returns the legacy (params, history)."""
-    _warn_deprecated("train_predictor", "SimNet.train")
-    params, history = train_loop(
-        data, pcfg, epochs=epochs, batch_size=batch_size, lr=lr,
-        seed=seed, log_every=log_every,
-    )
-    return params, history
-
-
-def simulate(
-    trace: Trace,
-    params,
-    pcfg: PredictorConfig,
-    sim_cfg: Optional[SimConfig] = None,
-    n_lanes: int = 16,
-    use_kernel: bool = False,
-) -> Dict:
-    """Deprecated: use `SimNet.simulate`. Returns the legacy dict shape
-    (now produced by the engine pack path — the old separate
-    `simulate_trace` wiring is gone)."""
-    _warn_deprecated("simulate", "SimNet.simulate")
-    sn = SimNet(params=params, pcfg=pcfg, sim_cfg=sim_cfg, use_kernel=use_kernel)
-    return sn.simulate(trace, n_lanes=n_lanes, timeit=True).to_single_dict()
-
-
-def simulate_many(
-    traces: Sequence[Trace],
-    params=None,
-    pcfg: Optional[PredictorConfig] = None,
-    sim_cfg=None,
-    *,
-    n_lanes=8,
-    use_kernel: bool = False,
-    timeit: bool = False,
-) -> Dict:
-    """Deprecated: use `SimNet.simulate_many`. Returns the legacy dict
-    shape; per-workload totals are unchanged (same packed scan)."""
-    _warn_deprecated("simulate_many", "SimNet.simulate_many")
-    if params is not None and pcfg is None:
-        raise ValueError("pcfg is required when params are given")
-    if sim_cfg is None or isinstance(sim_cfg, SimConfig):
-        session_cfg, per_workload = sim_cfg, None
-    else:  # per-workload configs: size the engine for the widest context
-        per_workload = list(sim_cfg)
-        session_cfg = dataclasses.replace(
-            per_workload[0], ctx_len=max(c.ctx_len for c in per_workload)
-        )
-    sn = SimNet(params=params, pcfg=pcfg, sim_cfg=session_cfg, use_kernel=use_kernel)
-    res = sn.simulate_many(
-        traces, n_lanes=n_lanes, sim_cfgs=per_workload, timeit=timeit
-    )
-    return res.to_dict()

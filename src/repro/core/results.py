@@ -2,8 +2,7 @@
 
 Every simulation / training entry point returns one of these instead of an
 ad-hoc dict: the fields are the contract, `.to_dict()` is the JSON form
-(and, for `SimResult`, exactly the legacy dict shape the pre-session API
-returned, so shimmed callers see bit-identical payloads).
+the CLI emits.
 """
 from __future__ import annotations
 
@@ -56,6 +55,9 @@ class SimResult:
     throughput_ips: float
     seconds: float
     first_call_seconds: float
+    # compile-cache activity of this run (hits/misses/compile_seconds),
+    # None when the producer did not record it
+    cache: Optional[Mapping[str, float]] = None
 
     @property
     def n_workloads(self) -> int:
@@ -81,8 +83,8 @@ class SimResult:
         raise KeyError(name)
 
     def to_dict(self) -> Dict[str, Any]:
-        """Legacy `api.simulate_many` dict shape (JSON-ready)."""
-        return {
+        """JSON-ready form (the CLI's output shape)."""
+        d = {
             "workloads": [w.to_dict() for w in self.workloads],
             "total_cycles": self.total_cycles,
             "total_instructions": self.total_instructions,
@@ -91,16 +93,8 @@ class SimResult:
             "seconds": self.seconds,
             "first_call_seconds": self.first_call_seconds,
         }
-
-    def to_single_dict(self) -> Dict[str, Any]:
-        """Legacy `api.simulate` dict shape (requires exactly one workload)."""
-        if len(self.workloads) != 1:
-            raise ValueError(f"to_single_dict on {len(self.workloads)} workloads")
-        w = self.workloads[0]
-        d = w.to_dict()
-        d.pop("name")
-        d["throughput_ips"] = self.throughput_ips
-        d["seconds"] = self.seconds
+        if self.cache is not None:
+            d["cache"] = dict(self.cache)
         return d
 
 

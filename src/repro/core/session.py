@@ -3,8 +3,12 @@
 The paper's deployment model (train-once / simulate-everywhere) as an API:
 a session owns a trained latency predictor (or runs teacher-forced without
 one) and routes EVERY simulation — single workload, multi-workload pack,
-design-space sweep — through the chunked / donated / mesh-shardable
-`serving.simnet_engine.SimNetEngine` pack path. There is no second wiring.
+design-space sweep — through the resident `serving.service.SimServe`
+path: single-session use is just a service with one client. The session's
+predictor is a resident model in a (private or shared) service, jobs pack
+into shared lane batches, and compiled chunk executables come from the
+process-wide compile cache, so a second session around a same-architecture
+model pays zero compiles.
 
     sn = SimNet.train(data, PredictorConfig(kind="c3"))   # or .from_artifact
     sn.save("artifacts/models/c3")                        # PredictorArtifact
@@ -12,11 +16,13 @@ design-space sweep — through the chunked / donated / mesh-shardable
     res   = sn.simulate_many(traces, n_lanes=8)           # SimResult, packed
     swept = sn.sweep({"256kB": tr0, "4MB": tr1})          # SweepResult
 
-`repro.core.api` keeps the legacy loose-function signatures as thin
-deprecation shims over this class; `python -m repro` is the CLI face.
+Many concurrent clients / many resident models: use `SimServe` directly
+(`serving.service`); `python -m repro` is the CLI face (`repro serve` for
+batch job files).
 """
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Any, Dict, Mapping, Optional, Sequence, Union
 
@@ -25,7 +31,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.artifact import PredictorArtifact
-from repro.core import features as F
 from repro.core.dataset import build_dataset
 from repro.core.predictor import (
     PredictorConfig,
@@ -34,8 +39,9 @@ from repro.core.predictor import (
     init_predictor,
     split_heads,
 )
-from repro.core.results import SimResult, SweepResult, TrainResult, WorkloadResult
-from repro.core.simulator import SimConfig, max_packed_steps
+from repro.core.results import SimResult, SweepResult, TrainResult
+from repro.core.simulator import SimConfig
+from repro.serving.service import SimServe
 from repro.serving.simnet_engine import SimNetEngine
 from repro.training.optimizer import AdamConfig, adam_init, adam_update
 
@@ -160,9 +166,14 @@ class SimNet:
       SimNet.from_artifact(path)             load a saved artifact
       SimNet.train(data, pcfg, ...)          train, session owns the result
 
-    All simulate entry points share the engine's packed scan; ``mesh``
-    shards the lane axis, ``chunk`` bounds device memory for long traces.
+    All simulate entry points submit to a `SimServe` (a private
+    one-resident-model service by default; pass ``service=`` to join a
+    shared one) and run as packed lane batches; ``mesh`` shards the lane
+    axis, ``chunk`` bounds device memory for long traces, ``cache``
+    overrides the process-wide executable cache.
     """
+
+    _session_ids = itertools.count()
 
     def __init__(
         self,
@@ -175,6 +186,9 @@ class SimNet:
         use_kernel: bool = False,
         chunk: int = 1024,
         train_result: Optional[TrainResult] = None,
+        service: Optional[SimServe] = None,
+        model_id: Optional[str] = None,
+        cache=None,
     ):
         self._metadata: Dict[str, Any] = {}
         if artifact is not None:
@@ -193,12 +207,25 @@ class SimNet:
         self.chunk = chunk
         self.train_result = train_result
         self.engine = SimNetEngine(
-            params, pcfg, self.sim_cfg, mesh=mesh, use_kernel=use_kernel
+            params, pcfg, self.sim_cfg, mesh=mesh, use_kernel=use_kernel,
+            cache=cache,
+        )
+        # the session's predictor becomes a resident model in a service —
+        # a private single-model SimServe unless the caller shares one
+        self.service = service or SimServe(chunk=chunk, cache=self.engine.cache)
+        kind = pcfg.kind if pcfg is not None else "teacher-forced"
+        self.model_id = self.service.register_engine(
+            model_id or f"session{next(self._session_ids)}-{kind}", self.engine
         )
 
     def __repr__(self):
         head = self.pcfg.kind if self.pcfg is not None else "teacher-forced"
         return f"SimNet({head}, ctx_len={self.sim_cfg.ctx_len})"
+
+    def close(self):
+        """Evict this session's resident model from its service registry
+        (matters when many short-lived sessions join a shared service)."""
+        self.service.registry.remove(self.model_id)
 
     # ------------------------------------------------------------ lifecycle
 
@@ -284,8 +311,11 @@ class SimNet:
         chunk: Optional[int] = None,
         timeit: bool = False,
     ) -> SimResult:
-        """Pack all workloads onto one lane axis and run THE simulation path
-        (chunked jitted scan, donated state, mesh-sharded lanes).
+        """Pack all workloads onto one lane axis and run THE simulation path:
+        submit every workload to the session's `SimServe` and drain — the
+        scheduler packs them into shared, lane-bucketed batches against the
+        session's resident predictor (chunked resident executables, donated
+        state, mesh-sharded lanes).
 
         ``traces`` are labelled `des.trace.Trace` objects (DES comparison
         fields filled in) or raw trace_arrays dicts. ``n_lanes`` and
@@ -295,44 +325,60 @@ class SimNet:
         traces = list(traces)
         if not traces:
             raise ValueError("simulate_many needs at least one workload")
-        arrs = [t if isinstance(t, dict) else F.trace_arrays(t) for t in traces]
         lanes = [n_lanes] * len(traces) if isinstance(n_lanes, int) else list(n_lanes)
-        # shrink the streaming chunk to the pack's own length so short packs
-        # don't pay for pad-to-chunk inactive steps
-        eff_chunk = max(1, min(chunk or self.chunk, max_packed_steps(arrs, lanes)))
-        res = self.engine.simulate_many(
-            arrs, n_lanes=lanes, chunk=eff_chunk, cfgs=sim_cfgs, timeit=timeit
-        )
-        workloads = []
-        for i, t in enumerate(traces):
-            cycles = float(res["workload_cycles"][i])
-            n = int(res["n_instructions"][i])
-            kw: Dict[str, Any] = {}
-            ref_lat = getattr(t, "fetch_lat", None)
-            if ref_lat is not None and ref_lat.any():
-                ref = t.total_cycles
-                des_cpi = ref / t.n
-                kw = {
-                    "des_cycles": ref,
-                    "des_cpi": des_cpi,
-                    "cpi_error": abs(cycles / n - des_cpi) / des_cpi,
-                }
-            workloads.append(WorkloadResult(
-                name=getattr(t, "name", f"workload{i}"),
-                total_cycles=cycles,
-                cpi=cycles / n,
-                n_instructions=n,
-                n_lanes=int(lanes[i]),
-                overflow=int(res["workload_overflow"][i]),
-                **kw,
-            ))
+        if len(lanes) != len(traces):
+            raise ValueError(f"n_lanes has {len(lanes)} entries for {len(traces)} workloads")
+        if sim_cfgs is None or isinstance(sim_cfgs, SimConfig):
+            cfgs = [sim_cfgs] * len(traces)
+        else:
+            cfgs = list(sim_cfgs)
+        if len(cfgs) != len(traces):
+            raise ValueError(f"sim_cfgs has {len(cfgs)} entries for {len(traces)} workloads")
+        handles = []
+        try:
+            for i, (t, ln, cfg) in enumerate(zip(traces, lanes, cfgs)):
+                handles.append(self.service.submit(
+                    t, self.model_id,
+                    n_lanes=int(ln), sim_cfg=cfg, timeit=timeit,
+                    chunk=chunk or self.chunk,
+                    name=getattr(t, "name", None) or f"workload{i}",
+                ))
+        except Exception:
+            # a rejected job must not leave its batchmates queued — they
+            # would ride (and skew) the next unrelated simulate call
+            for h in handles:
+                self.service.cancel(h)
+            raise
+        try:
+            self.service.drain()
+        except Exception:
+            # same invariant when a batch dies mid-drain: withdraw this
+            # call's still-pending jobs (ran/errored ones are unaffected)
+            for h in handles:
+                self.service.cancel(h)
+            raise
+        workloads = tuple(h.result() for h in handles)
+        reports, seen = [], set()
+        for h in handles:
+            if id(h.batch) not in seen:
+                seen.add(id(h.batch))
+                reports.append(h.batch)
+        # instruction/cycle totals cover THIS call's workloads only (on a
+        # shared service a batch may also carry other clients' jobs);
+        # seconds are the wall time of the dispatches that served them
+        seconds = sum(r.seconds for r in reports)
+        total_instructions = sum(w.n_instructions for w in workloads)
         return SimResult(
-            workloads=tuple(workloads),
-            total_cycles=float(res["total_cycles"]),
-            total_instructions=int(res["total_instructions"]),
-            throughput_ips=float(res["throughput_ips"]),
-            seconds=float(res["seconds"]),
-            first_call_seconds=float(res["first_call_seconds"]),
+            workloads=workloads,
+            total_cycles=sum(w.total_cycles for w in workloads),
+            total_instructions=total_instructions,
+            throughput_ips=total_instructions / seconds,
+            seconds=seconds,
+            first_call_seconds=sum(r.first_call_seconds for r in reports),
+            cache={
+                k: sum(r.cache[k] for r in reports)
+                for k in ("hits", "misses", "compile_seconds")
+            },
         )
 
     def simulate(
@@ -341,9 +387,13 @@ class SimNet:
         n_lanes: int = 16,
         *,
         chunk: Optional[int] = None,
-        timeit: bool = True,
+        timeit: bool = False,
     ) -> SimResult:
-        """Single-workload simulation = the 1-workload pack (same path)."""
+        """Single-workload simulation = the 1-workload pack (same path).
+
+        timeit=True re-streams a device-staged copy of the whole pack for
+        steady-state throughput — device memory O(trace), so keep it for
+        benchmark-sized traces; the default streams O(chunk)."""
         return self.simulate_many(
             [trace], n_lanes=n_lanes, chunk=chunk, timeit=timeit
         )

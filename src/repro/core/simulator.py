@@ -407,6 +407,39 @@ def pack_workloads(
     )
 
 
+def pad_packed_lanes(packed: PackedWorkloads, n_lanes: int) -> PackedWorkloads:
+    """Grow a pack's lane axis to ``n_lanes`` with dead lanes (executable
+    bucketing). Dead lanes are inactive at every step, so they freeze in
+    their all-zero initial state: cur_tick 0, no in-flight entries, drain
+    0, overflow 0 — they contribute exactly nothing to any workload's
+    segment_sum and per-workload totals stay bit-identical."""
+    L = packed.n_lanes
+    if n_lanes < L:
+        raise ValueError(f"cannot shrink a {L}-lane pack to {n_lanes} lanes")
+    if n_lanes == L:
+        return packed
+    pad = n_lanes - L
+    xs = {
+        k: np.concatenate(
+            [v, np.zeros((v.shape[0], pad) + v.shape[2:], v.dtype)], axis=1
+        )
+        for k, v in packed.xs.items()
+    }
+
+    def lane_pad(a, fill):
+        return np.concatenate([a, np.full(pad, fill, a.dtype)])
+
+    return dataclasses.replace(
+        packed,
+        xs=xs,
+        # id 0 is safe: a dead lane's totals are exactly zero
+        workload_id=lane_pad(packed.workload_id, 0),
+        retire_width=lane_pad(packed.retire_width, 1),
+        lane_ctx=lane_pad(packed.lane_ctx, packed.cfg.ctx_len),
+        lane_steps=lane_pad(packed.lane_steps, 0),
+    )
+
+
 def max_packed_steps(
     trace_arrays_list: Sequence[dict], n_lanes: Union[int, Sequence[int]]
 ) -> int:

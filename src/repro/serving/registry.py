@@ -1,0 +1,100 @@
+"""Model registry: resident SimNet predictors shared across all requests.
+
+The paper's deployment model is train-once / simulate-everywhere; the
+serving-side mirror is load-once / serve-everyone. A `ModelRegistry` keys
+resident `SimNetEngine`s by model id: each predictor's weights are loaded
+(from a `PredictorArtifact` directory or in-memory params) exactly once
+and every request against that id reuses the same engine — and, through
+the process-wide compile cache, same-architecture models reuse the same
+compiled executables.
+
+The special id ``TEACHER_FORCED`` is the resident label-replay "model"
+(no weights): requests without a model id replay their DES labels through
+the identical engine path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+from repro.checkpoint.artifact import PredictorArtifact
+from repro.core.predictor import PredictorConfig
+from repro.core.simulator import SimConfig
+from repro.serving.compile_cache import CompileCache
+from repro.serving.simnet_engine import SimNetEngine
+
+TEACHER_FORCED = "teacher-forced"
+
+
+class ModelRegistry:
+    """Resident engines by model id. Construction-time ``mesh`` /
+    ``use_kernel`` / ``cache`` apply to every engine the registry builds
+    (an externally built engine can be adopted via `add_engine`)."""
+
+    def __init__(self, *, mesh=None, use_kernel: bool = False,
+                 cache: Optional[CompileCache] = None):
+        self.mesh = mesh
+        self.use_kernel = use_kernel
+        self.cache = cache
+        self._engines: Dict[str, SimNetEngine] = {}
+
+    # ------------------------------------------------------------- admission
+
+    def add_engine(self, model_id: str, engine: SimNetEngine) -> str:
+        """Adopt an already-built engine (e.g. a SimNet session's) as a
+        resident model."""
+        if model_id in self._engines and self._engines[model_id] is not engine:
+            raise ValueError(f"model id {model_id!r} is already registered")
+        self._engines[model_id] = engine
+        return model_id
+
+    def add(
+        self,
+        model_id: str,
+        params=None,
+        pcfg: Optional[PredictorConfig] = None,
+        sim_cfg: Optional[SimConfig] = None,
+    ) -> str:
+        """Register in-memory weights (or a teacher-forced entry when
+        ``params`` is None) as a resident model."""
+        return self.add_engine(model_id, SimNetEngine(
+            params, pcfg, sim_cfg, mesh=self.mesh,
+            use_kernel=self.use_kernel, cache=self.cache,
+        ))
+
+    def load(self, model_id: str, path, sim_cfg: Optional[SimConfig] = None) -> str:
+        """Load a `PredictorArtifact` directory once; all later requests
+        against ``model_id`` share the resident weights."""
+        art = PredictorArtifact.load(path)
+        return self.add(
+            model_id, params=art.params, pcfg=art.pcfg,
+            sim_cfg=sim_cfg or art.sim_cfg,
+        )
+
+    def ensure_teacher_forced(self, sim_cfg: Optional[SimConfig] = None) -> str:
+        if TEACHER_FORCED not in self._engines:
+            self.add(TEACHER_FORCED, sim_cfg=sim_cfg)
+        return TEACHER_FORCED
+
+    def remove(self, model_id: str) -> None:
+        """Evict a resident model (frees its engine; a shared service
+        hosting short-lived sessions should evict their entries)."""
+        self._engines.pop(model_id, None)
+
+    # --------------------------------------------------------------- lookup
+
+    def get(self, model_id: str) -> SimNetEngine:
+        try:
+            return self._engines[model_id]
+        except KeyError:
+            raise KeyError(
+                f"no resident model {model_id!r}; registered: {sorted(self._engines)}"
+            ) from None
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self._engines
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    def ids(self) -> Iterable[str]:
+        return tuple(self._engines)

@@ -1,0 +1,408 @@
+"""SimServe: a resident continuous-batching simulation service.
+
+The paper's headline is throughput — one GPU-resident predictor amortized
+over massive lane batches (§3.3). `SimServe` is that deployment shape as
+an API: predictors stay resident in a `ModelRegistry`, compiled chunk
+executables stay resident in the process-wide compile cache, and a job
+queue continuously packs pending simulation requests — from *different*
+clients and different models — into shared lane batches per resident
+predictor, preserving per-workload results exactly.
+
+    serve = SimServe()
+    serve.register("c3", "artifacts/models/c3")      # loaded once, resident
+    h1 = serve.submit(trace_a, "c3", n_lanes=8)      # JobHandle
+    h2 = serve.submit(trace_b, "c3", n_lanes=4)      # same batch as h1
+    h3 = serve.submit(trace_c)                       # teacher-forced replay
+    serve.drain()                                    # run all pending packs
+    h1.result()                                      # WorkloadResult
+    serve.stats()                                    # jobs/batches/cache hits
+
+Single-session use is just a service with one client: `SimNet.simulate*`
+routes through a private `SimServe` around the session's own engine.
+Batch mode from the shell: ``python -m repro serve --jobs jobs.json``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import features as F
+from repro.core.results import WorkloadResult
+from repro.core.simulator import SimConfig, max_packed_steps
+from repro.serving.compile_cache import (
+    CompileCache,
+    chunk_bucket,
+    global_cache,
+    lane_bucket,
+)
+from repro.serving.registry import ModelRegistry, TEACHER_FORCED
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchReport:
+    """One shared lane batch the scheduler dispatched."""
+
+    model_id: str
+    job_ids: Tuple[int, ...]
+    n_jobs: int
+    n_live_lanes: int
+    n_lanes: int  # bucketed (dead lanes = n_lanes - n_live_lanes)
+    chunk: int
+    total_instructions: int
+    seconds: float
+    first_call_seconds: float
+    throughput_ips: float
+    cache: Dict[str, Any]  # hit/miss/compile-seconds delta of this batch
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["job_ids"] = list(self.job_ids)
+        return d
+
+
+@dataclasses.dataclass
+class _Job:
+    job_id: int
+    model_id: str
+    trace: Any  # original TraceLike (kept for the DES-comparison readout)
+    arrs: Dict[str, Any]
+    name: str
+    n_lanes: int
+    sim_cfg: Optional[SimConfig]
+    timeit: bool
+    chunk: Optional[int]
+    result: Optional[WorkloadResult] = None
+    batch: Optional[BatchReport] = None
+    error: Optional[BaseException] = None
+    cancelled: bool = False
+
+
+class JobHandle:
+    """A submitted simulation request. ``result()`` drains the service if
+    the job has not run yet, then returns this workload's totals."""
+
+    def __init__(self, service: "SimServe", job: _Job):
+        self._service = service
+        self._job = job
+
+    @property
+    def job_id(self) -> int:
+        return self._job.job_id
+
+    @property
+    def model_id(self) -> str:
+        return self._job.model_id
+
+    def done(self) -> bool:
+        return self._job.result is not None
+
+    def result(self) -> WorkloadResult:
+        if self._job.cancelled:
+            raise RuntimeError(f"job {self.job_id} was cancelled")
+        if not self.done():
+            self._service.drain()
+        if self._job.error is not None:
+            raise RuntimeError(
+                f"job {self.job_id} failed in its batch"
+            ) from self._job.error
+        if self._job.result is None:
+            # left the queue but not finished: another thread's drain holds
+            # it in an in-flight batch — never hand back a silent None
+            raise RuntimeError(
+                f"job {self.job_id} is in flight in another drain; "
+                "call result() again after it completes"
+            )
+        return self._job.result
+
+    @property
+    def batch(self) -> BatchReport:
+        if not self.done():
+            raise RuntimeError(f"job {self.job_id} has not run (call drain())")
+        return self._job.batch
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return f"JobHandle({self.job_id}, model={self.model_id!r}, {state})"
+
+
+class SimServe:
+    """Job-queue scheduler over resident predictors.
+
+    ``submit`` enqueues; ``drain`` repeatedly takes every compatible
+    pending job of one resident model — across requests — and runs them as
+    ONE packed engine dispatch (lane-bucketed, so the compiled executable
+    is shared with every other batch of the same shape and architecture).
+    Jobs are compatible when they share the model and the SimConfig fields
+    the packed scan cannot replay per lane (everything except
+    ctx_len / retire_width, which pack per-lane).
+    """
+
+    def __init__(
+        self,
+        registry: Optional[ModelRegistry] = None,
+        *,
+        chunk: int = 1024,
+        max_batch_lanes: int = 4096,
+        mesh=None,
+        use_kernel: bool = False,
+        cache: Optional[CompileCache] = None,
+    ):
+        self.cache = cache if cache is not None else global_cache()
+        self.registry = registry or ModelRegistry(
+            mesh=mesh, use_kernel=use_kernel, cache=self.cache
+        )
+        self.chunk = chunk
+        self.max_batch_lanes = max_batch_lanes
+        self._ids = itertools.count()
+        self._qlock = threading.Lock()  # guards _pending (submit vs drain)
+        self._pending: List[_Job] = []
+        # recent dispatch history only — a resident service must not grow
+        # per-batch state without bound; aggregates live in the counters
+        self._batches: collections.deque = collections.deque(maxlen=256)
+        self._n_batches = 0
+        self._jobs_submitted = 0
+        self._jobs_completed = 0
+        self._lanes_live = 0
+        self._lanes_dispatched = 0
+        self._dead_lane_steps = 0  # bucketing overhead, for stats honesty
+
+    # ----------------------------------------------------------- admission
+
+    def register(self, model_id: str, source=None, *,
+                 params=None, pcfg=None, sim_cfg=None) -> str:
+        """Make a model resident. ``source`` may be a PredictorArtifact
+        directory path, a PredictorArtifact, or None with params/pcfg
+        (or nothing at all: a teacher-forced entry)."""
+        from repro.checkpoint.artifact import PredictorArtifact
+
+        if isinstance(source, PredictorArtifact):
+            return self.registry.add(
+                model_id, params=source.params, pcfg=source.pcfg,
+                sim_cfg=sim_cfg or source.sim_cfg,
+            )
+        if source is not None:  # a path
+            return self.registry.load(model_id, source, sim_cfg=sim_cfg)
+        return self.registry.add(model_id, params=params, pcfg=pcfg, sim_cfg=sim_cfg)
+
+    def register_engine(self, model_id: str, engine) -> str:
+        return self.registry.add_engine(model_id, engine)
+
+    # ------------------------------------------------------------ the queue
+
+    def submit(
+        self,
+        trace,
+        model_id: Optional[str] = None,
+        *,
+        n_lanes: int = 8,
+        sim_cfg: Optional[SimConfig] = None,
+        name: Optional[str] = None,
+        timeit: bool = False,
+        chunk: Optional[int] = None,
+    ) -> JobHandle:
+        """Enqueue one workload against a resident model (None = the
+        teacher-forced resident). Returns immediately; the job runs at the
+        next ``drain()`` packed together with every compatible request."""
+        if model_id is None:
+            model_id = self.registry.ensure_teacher_forced()
+        elif model_id not in self.registry:
+            raise KeyError(
+                f"no resident model {model_id!r}; register() it first "
+                f"(registered: {sorted(self.registry.ids())})"
+            )
+        if sim_cfg is not None:
+            # ctx_len / retire_width replay per lane inside the pack; every
+            # other SimConfig field is baked into the resident executable —
+            # a mismatch must fail loudly here, not simulate with the
+            # engine's values
+            eng_cfg = self.registry.get(model_id).sim_cfg
+            if dataclasses.replace(
+                sim_cfg, ctx_len=eng_cfg.ctx_len, retire_width=eng_cfg.retire_width
+            ) != eng_cfg:
+                raise ValueError(
+                    f"job SimConfig {sim_cfg} is incompatible with resident "
+                    f"model {model_id!r} ({eng_cfg}): only ctx_len/retire_width "
+                    "may differ — register a model with the wanted config"
+                )
+            if sim_cfg.ctx_len > eng_cfg.ctx_len:
+                raise ValueError(
+                    f"job ctx_len {sim_cfg.ctx_len} exceeds resident model "
+                    f"{model_id!r} ctx_len {eng_cfg.ctx_len} (the predictor "
+                    "input width is fixed)"
+                )
+        arrs = trace if isinstance(trace, dict) else F.trace_arrays(trace)
+        T = int(arrs["feat"].shape[0])
+        if not 1 <= n_lanes <= T:
+            # statically invalid jobs must be refused here — at drain they
+            # would detonate the shared batch and poison valid batchmates
+            raise ValueError(
+                f"n_lanes={n_lanes} invalid for a {T}-instruction workload "
+                "(need 1 <= n_lanes <= instructions)"
+            )
+        job = _Job(
+            job_id=next(self._ids),
+            model_id=model_id,
+            trace=trace,
+            arrs=arrs,
+            name=name or getattr(trace, "name", None) or f"job{self._jobs_submitted}",
+            n_lanes=int(n_lanes),
+            sim_cfg=sim_cfg,
+            timeit=timeit,
+            chunk=chunk,
+        )
+        with self._qlock:
+            self._pending.append(job)
+            self._jobs_submitted += 1
+        return JobHandle(self, job)
+
+    def cancel(self, handle: JobHandle) -> bool:
+        """Withdraw a still-pending job from the queue (False if it already
+        ran or left the queue). Lets a client unwind a multi-submit that
+        failed halfway instead of leaving orphans for the next batch."""
+        with self._qlock:
+            for i, job in enumerate(self._pending):
+                if job is handle._job:
+                    del self._pending[i]
+                    job.cancelled = True  # result() raises, never None
+                    return True
+        return False
+
+    def _group_key(self, job: _Job):
+        """Jobs sharing a key may ride one packed scan: same resident
+        model and same timeit mode. (The non-per-lane SimConfig fields are
+        already guaranteed by submit() to match the resident engine's.)"""
+        return (job.model_id, job.timeit)
+
+    def drain(self) -> List[BatchReport]:
+        """Run every pending job. Each iteration packs the head-of-queue
+        job with all compatible pending jobs (FIFO, capped at
+        ``max_batch_lanes`` live lanes) into one engine dispatch.
+
+        Returns the reports of the batches THIS call ran. If a batch
+        fails mid-drain the error propagates; batches completed before it
+        stay recorded in ``self.batches`` / the counters (only the failed
+        batch's jobs carry the error), and the untouched remainder of the
+        queue drains on the next call."""
+        reports: List[BatchReport] = []
+        while True:
+            with self._qlock:  # batch selection is atomic vs racing submits
+                if not self._pending:
+                    break
+                key = self._group_key(self._pending[0])
+                batch: List[_Job] = []
+                lanes = 0
+                rest: List[_Job] = []
+                for job in self._pending:
+                    # the head job always rides (a single job wider than the
+                    # cap gets its own batch — it must not wedge the queue)
+                    if self._group_key(job) == key and (
+                        not batch or lanes + job.n_lanes <= self.max_batch_lanes
+                    ):
+                        batch.append(job)
+                        lanes += job.n_lanes
+                    else:
+                        rest.append(job)
+                self._pending = rest
+            try:
+                reports.append(self._run_batch(key[0], batch))
+            except Exception as e:
+                # the batch's jobs already left the queue — pin the error on
+                # each so result() raises instead of returning None, then
+                # surface it (the remaining queue drains on the next call)
+                for job in batch:
+                    job.error = e
+                raise
+        return reports
+
+    def _run_batch(self, model_id: str, jobs: List[_Job]) -> BatchReport:
+        engine = self.registry.get(model_id)
+        arrs = [j.arrs for j in jobs]
+        lanes = [j.n_lanes for j in jobs]
+        cfgs = [j.sim_cfg or engine.sim_cfg for j in jobs]
+        cap = min(j.chunk or self.chunk for j in jobs)
+        chunk = chunk_bucket(max_packed_steps(arrs, lanes), cap)
+        timeit = jobs[0].timeit
+        res = engine.simulate_many(
+            arrs, n_lanes=lanes, chunk=chunk, cfgs=cfgs, timeit=timeit
+        )
+        report = BatchReport(
+            model_id=model_id,
+            job_ids=tuple(j.job_id for j in jobs),
+            n_jobs=len(jobs),
+            n_live_lanes=int(res["n_live_lanes"]),
+            n_lanes=int(res["n_lanes"]),
+            chunk=chunk,
+            total_instructions=int(res["total_instructions"]),
+            seconds=float(res["seconds"]),
+            first_call_seconds=float(res["first_call_seconds"]),
+            throughput_ips=float(res["throughput_ips"]),
+            cache=dict(res["cache"]),
+        )
+        for i, job in enumerate(jobs):
+            job.result = self._workload_result(job, res, i)
+            job.batch = report
+        with self._qlock:  # concurrent drains must not lose counter updates
+            self._jobs_completed += len(jobs)
+            self._lanes_live += report.n_live_lanes
+            self._lanes_dispatched += report.n_lanes
+            self._dead_lane_steps += (
+                report.n_lanes - report.n_live_lanes
+            ) * int(res["n_steps"])  # padded steps the dispatch actually ran
+            self._n_batches += 1
+            self._batches.append(report)
+        return report
+
+    @staticmethod
+    def _workload_result(job: _Job, res: dict, i: int) -> WorkloadResult:
+        cycles = float(res["workload_cycles"][i])
+        n = int(res["n_instructions"][i])
+        kw: Dict[str, Any] = {}
+        ref_lat = getattr(job.trace, "fetch_lat", None)
+        if ref_lat is not None and ref_lat.any():
+            ref = job.trace.total_cycles
+            des_cpi = ref / job.trace.n
+            kw = {
+                "des_cycles": ref,
+                "des_cpi": des_cpi,
+                "cpi_error": abs(cycles / n - des_cpi) / des_cpi,
+            }
+        return WorkloadResult(
+            name=job.name,
+            total_cycles=cycles,
+            cpi=cycles / n,
+            n_instructions=n,
+            n_lanes=job.n_lanes,
+            overflow=int(res["workload_overflow"][i]),
+            **kw,
+        )
+
+    # -------------------------------------------------------------- readout
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def batches(self) -> Tuple[BatchReport, ...]:
+        """The most recent dispatches (bounded history; counters in
+        ``stats()`` cover the service's whole lifetime)."""
+        return tuple(self._batches)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "jobs_submitted": self._jobs_submitted,
+            "jobs_completed": self._jobs_completed,
+            "jobs_pending": len(self._pending),
+            "batches": self._n_batches,
+            "models_resident": sorted(self.registry.ids()),
+            "lanes_live": self._lanes_live,
+            "lanes_dispatched": self._lanes_dispatched,
+            "dead_lane_steps": self._dead_lane_steps,
+            "jobs_per_batch": (
+                self._jobs_completed / self._n_batches if self._n_batches else 0.0
+            ),
+            "cache": self.cache.stats(),
+        }

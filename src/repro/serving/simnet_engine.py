@@ -13,13 +13,21 @@ capacity) and streams arbitrarily long traces through chunked jitted calls
 with donated state buffers. ``simulate`` is the single-workload special
 case of the same path.
 
+Since the SimServe redesign the chunk program is **resident**: executables
+come from the process-wide `serving.compile_cache` keyed by architecture
+(never weights — params are a call argument), lane counts round up to
+power-of-two buckets with dead lanes masked, and the packed trace chunks
+are staged device-side once so a ``timeit`` re-stream measures the scan,
+not host transfers. Two engines around two models of the same kind share
+one compiled program; a fresh engine on a warm cache pays zero compiles.
+
 ``input_specs()`` / ``lower()`` make the engine dry-runnable on the
 production mesh alongside the LM pool (simnet-c3 / simnet-rb7 arch cells).
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -27,16 +35,22 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import features as F
-from repro.core.predictor import PredictorConfig, make_predict_fn
+from repro.core.predictor import PredictorConfig, apply_raw, decode_latency
 from repro.core.simulator import (
-    PackedWorkloads,
     SimConfig,
     SimState,
-    drain_cycles,
     init_state,
     make_sim_scan,
     pack_workloads,
+    pad_packed_lanes,
     workload_totals,
+)
+from repro.serving.compile_cache import (
+    CompileCache,
+    ExecutableKey,
+    global_cache,
+    lane_bucket,
+    mesh_fingerprint,
 )
 
 
@@ -82,24 +96,32 @@ def chunk_shardings(mesh):
 
 class SimNetEngine:
     def __init__(self, params=None, pcfg: Optional[PredictorConfig] = None,
-                 sim_cfg: Optional[SimConfig] = None, mesh=None, use_kernel: bool = False):
+                 sim_cfg: Optional[SimConfig] = None, mesh=None,
+                 use_kernel: bool = False, cache: Optional[CompileCache] = None):
         """params=None runs teacher-forced: the scan replays the packed DES
         labels through the identical chunked/donated/sharded path (exactness
-        harness + label-replay dry-runs without a predictor)."""
+        harness + label-replay dry-runs without a predictor).
+
+        ``cache`` overrides the process-wide compile cache (cold-cache
+        benchmarks / isolation in tests)."""
         if params is not None and pcfg is None:
             raise ValueError("pcfg is required when params are given")
-        self.params = params
         self.pcfg = pcfg
         self.sim_cfg = sim_cfg or (
             SimConfig(ctx_len=pcfg.ctx_len) if pcfg is not None else SimConfig()
         )
         self.mesh = mesh
-        predict = (
-            make_predict_fn(params, pcfg, use_kernel=use_kernel)
-            if params is not None else None
-        )
+        self.use_kernel = use_kernel
+        self.cache = cache if cache is not None else global_cache()
+        self.params = params
+        self._params_staged = params is None  # nothing to stage teacher-forced
 
-        def run_chunk(state: SimState, xs, retire_width, lane_ctx):
+        def run_chunk(p, state: SimState, xs, retire_width, lane_ctx):
+            predict = None
+            if self.pcfg is not None:
+                def predict(x):
+                    raw = apply_raw(p, x, self.pcfg, use_kernel=self.use_kernel)
+                    return decode_latency(raw, self.pcfg)
             step = make_sim_scan(
                 predict, self.sim_cfg,
                 retire_width=retire_width, lane_ctx=lane_ctx, emit_outputs=False,
@@ -111,14 +133,50 @@ class SimNetEngine:
             st_sh = state_shardings(mesh)
             xs_sh = chunk_shardings(mesh)
             lane_sh = lane_sharding(mesh)
+            p_sh = jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, P()), self.params
+            )
             self._run_chunk = jax.jit(
                 run_chunk,
-                in_shardings=(st_sh, xs_sh, lane_sh, lane_sh),
+                in_shardings=(p_sh, st_sh, xs_sh, lane_sh, lane_sh),
                 out_shardings=st_sh,
-                donate_argnums=(0,),
+                donate_argnums=(1,),
             )
         else:
-            self._run_chunk = jax.jit(run_chunk, donate_argnums=(0,))
+            self._run_chunk = jax.jit(run_chunk, donate_argnums=(1,))
+
+    # -- resident executables ------------------------------------------
+
+    def executable_key(self, n_lanes: int, chunk: int) -> ExecutableKey:
+        """Cache identity of the chunk program at a (bucketed) shape.
+        Weights are absent on purpose: same-architecture models share."""
+        return ExecutableKey(
+            predictor=self.pcfg,
+            sim_cfg=self.sim_cfg,
+            n_lanes=n_lanes,
+            chunk=chunk,
+            mesh=mesh_fingerprint(self.mesh),
+            use_kernel=self.use_kernel,
+        )
+
+    def _param_specs(self):
+        return jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.params
+        )
+
+    def _stage_params(self):
+        """Put the weights on device once (replicated over the mesh when
+        present) — lazily, so dry-run lowering stays allocation-free."""
+        if not self._params_staged:
+            if self.mesh is not None:
+                self.params = jax.device_put(
+                    self.params, jax.tree_util.tree_map(
+                        lambda _: NamedSharding(self.mesh, P()), self.params
+                    ),
+                )
+            else:
+                self.params = jax.device_put(self.params)
+            self._params_staged = True
 
     def lower(self, n_lanes: int, chunk: int):
         """Dry-run lowering against ShapeDtypeStructs (no allocation)."""
@@ -126,7 +184,17 @@ class SimNetEngine:
         rw, lc = lane_param_specs(n_lanes)
         ctx = self.mesh if self.mesh is not None else _nullcontext()
         with ctx:
-            return self._run_chunk.lower(state, chunk_specs(n_lanes, chunk), rw, lc)
+            return self._run_chunk.lower(
+                self._param_specs(), state, chunk_specs(n_lanes, chunk), rw, lc
+            )
+
+    def executable(self, n_lanes: int, chunk: int):
+        """The AOT-compiled chunk program from the shared cache (compiled
+        exactly once per ExecutableKey process-wide)."""
+        return self.cache.get(
+            self.executable_key(n_lanes, chunk),
+            lambda: self.lower(n_lanes, chunk).compile(),
+        )
 
     # -- packed multi-workload path ------------------------------------
 
@@ -139,11 +207,17 @@ class SimNetEngine:
         timeit: bool = False,
     ) -> dict:
         """Simulate many workloads in one packed lane batch, streaming the
-        time axis through chunked jitted calls with donated state buffers.
+        time axis through chunked calls to the cache-resident executable
+        with donated state buffers.
 
-        timeit=True streams the packed input a second time and reports
-        steady-state throughput from that compiled pass; the one-shot
-        compile+run cost stays in ``first_call_seconds`` either way."""
+        The lane axis is bucketed to the next power of two (dead lanes are
+        fully masked and contribute nothing), so nearby lane counts reuse
+        one executable. timeit=True streams the device-staged pack a second
+        time and reports steady-state throughput from that pass; the
+        one-shot compile(or cache-hit)+run cost stays in
+        ``first_call_seconds`` either way."""
+        t_start = time.time()
+        cache_before = self.cache.counters()
         packed = pack_workloads(
             trace_arrays_list, n_lanes, cfgs if cfgs is not None else self.sim_cfg,
             pad_to=chunk,
@@ -153,21 +227,47 @@ class SimNetEngine:
                 f"packed ctx_len {packed.cfg.ctx_len} exceeds engine ctx_len "
                 f"{self.sim_cfg.ctx_len} (the predictor input width is fixed)"
             )
-        rw = jnp.asarray(packed.retire_width)
-        lc = jnp.asarray(packed.lane_ctx)
+        n_live = packed.n_lanes
+        packed = pad_packed_lanes(packed, lane_bucket(n_live))
+        self._stage_params()
+        exe = self.executable(packed.n_lanes, chunk)
+
+        # per-lane configs go device-side once; trace chunks stream through
+        # one staged buffer at a time (device memory stays O(chunk)) —
+        # except under timeit, where the WHOLE pack is staged up front so
+        # the timed re-stream measures the scan, not host→device transfers
+        # (timeit therefore holds the pack device-resident: use it on
+        # benchmark-sized packs, not unbounded traces)
+        put = (
+            (lambda x, sh: jax.device_put(x, sh))
+            if self.mesh is not None else (lambda x, sh: jnp.asarray(x))
+        )
+        xs_sh = chunk_shardings(self.mesh) if self.mesh is not None else None
+        lane_sh = lane_sharding(self.mesh) if self.mesh is not None else None
+        st_sh = state_shardings(self.mesh) if self.mesh is not None else None
+
+        def stage(lo):
+            return {k: put(v[lo : lo + chunk], xs_sh[k] if xs_sh else None)
+                    for k, v in packed.xs.items()}
+
+        offsets = range(0, packed.n_steps, chunk)
+        staged = [stage(lo) for lo in offsets] if timeit else None
+        rw = put(np.asarray(packed.retire_width), lane_sh)
+        lc = put(np.asarray(packed.lane_ctx), lane_sh)
 
         def one_pass():
             t0 = time.time()
             state = init_state(packed.n_lanes, self.sim_cfg)
-            for lo in range(0, packed.n_steps, chunk):
-                xs = {k: jnp.asarray(v[lo : lo + chunk]) for k, v in packed.xs.items()}
-                state = self._run_chunk(state, xs, rw, lc)
+            if st_sh is not None:
+                state = jax.device_put(state, st_sh)
+            for xs in staged if staged is not None else (stage(lo) for lo in offsets):
+                state = exe(self.params, state, xs, rw, lc)
             lane_total, cycles, overflow = workload_totals(state, packed)
             jax.block_until_ready(cycles)
             return time.time() - t0, lane_total, cycles, overflow
 
-        first_dt, lane_total, cycles, overflow = one_pass()
-        dt = first_dt
+        dt, lane_total, cycles, overflow = one_pass()
+        first_dt = time.time() - t_start  # compile/cache-hit + staging + run
         if timeit:
             dt, lane_total, cycles, overflow = one_pass()
         cycles = np.asarray(cycles, np.float64)
@@ -181,10 +281,13 @@ class SimNetEngine:
             "total_cycles": float(cycles.sum()),
             "total_instructions": total_instr,
             "n_lanes": packed.n_lanes,
+            "n_live_lanes": n_live,
+            "n_steps": packed.n_steps,  # padded scan length actually run
             "n_workloads": packed.n_workloads,
             "throughput_ips": total_instr / dt,
             "seconds": dt,
             "first_call_seconds": first_dt,
+            "cache": self.cache.delta_since(cache_before),
         }
 
     # -- single-workload convenience (same packed scan underneath) -----

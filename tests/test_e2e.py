@@ -45,26 +45,30 @@ def test_dedup_removes_duplicates():
 
 def test_training_improves_val_loss(tiny_data):
     pcfg = PredictorConfig(kind="c1", ctx_len=32)
-    params, hist = api.train_predictor(tiny_data, pcfg, epochs=3, batch_size=256)
-    assert hist["val_loss"][-1] < hist["val_loss"][0]
+    sn = api.SimNet.train(tiny_data, pcfg, epochs=3, batch_size=256,
+                          eval_errors=False)
+    hist = sn.train_result.val_loss
+    assert hist[-1] < hist[0]
 
 
 def test_trained_model_beats_trivial_baseline(tiny_data, small_trace_module):
     """The learned simulator must predict CPI better than assuming the
     benchmark's mean fetch latency is 1 (the 'ideal pipeline' baseline)."""
     pcfg = PredictorConfig(kind="c3", ctx_len=32)
-    params, _ = api.train_predictor(tiny_data, pcfg, epochs=8, batch_size=256)
-    res = api.simulate(small_trace_module, params, pcfg, n_lanes=4)
-    trivial_err = abs(1.0 - res["des_cpi"]) / res["des_cpi"]
+    sn = api.SimNet.train(tiny_data, pcfg, epochs=8, batch_size=256,
+                          eval_errors=False)
+    w = sn.simulate(small_trace_module, n_lanes=4)[0]
+    trivial_err = abs(1.0 - w.des_cpi) / w.des_cpi
     # few-epoch budget on a tiny trace: the meaningful property is beating
     # the ideal-pipeline baseline; full-budget accuracy lives in benchmarks
-    assert res["cpi_error"] < trivial_err
-    assert res["cpi_error"] < 0.8
+    assert w.cpi_error < trivial_err
+    assert w.cpi_error < 0.8
 
 
 def test_prediction_error_metric(tiny_data):
     pcfg = PredictorConfig(kind="c1", ctx_len=32)
-    params, _ = api.train_predictor(tiny_data, pcfg, epochs=1, batch_size=256)
-    errs = api.prediction_errors(params, pcfg, tiny_data["test_x"][:512], tiny_data["test_y"][:512])
+    sn = api.SimNet.train(tiny_data, pcfg, epochs=1, batch_size=256,
+                          eval_errors=False)
+    errs = api.prediction_errors(sn.params, pcfg, tiny_data["test_x"][:512], tiny_data["test_y"][:512])
     assert set(errs) == {"fetch", "execution", "store"}
     assert all(np.isfinite(v) for v in errs.values())

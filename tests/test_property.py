@@ -149,6 +149,43 @@ def test_packed_workloads_match_separate_runs(jobs):
     _check_packed_matches_separate(jobs)
 
 
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(8, 64),  # T instructions
+            st.integers(1, 5),  # lanes (buckets to 1/2/4/8 with dead lanes)
+            st.integers(0, 100),  # workload seed
+            st.sampled_from([4, 8]),  # per-job ctx_len
+            st.integers(1, 4),  # per-job retire_width
+        ),
+        min_size=1,
+        max_size=3,
+    )
+)
+@settings(max_examples=10, deadline=None)
+def test_service_bucketing_never_changes_totals(jobs):
+    """SimServe invariant: lane-count bucketing + dead-lane masking never
+    changes any workload's totals, for random job mixes with heterogeneous
+    per-job SimConfigs (teacher-forced; service path vs unbucketed core)."""
+    from repro.core.api import SimServe
+
+    arrs = [_synthetic_arrs(T, seed) for T, _, seed, _, _ in jobs]
+    lanes = [min(ln, T) for T, ln, _, _, _ in jobs]  # a lane needs ≥1 instr
+    cfgs = [SimConfig(ctx_len=ctx, retire_width=rw) for _, _, _, ctx, rw in jobs]
+    ref = simulate_many(arrs, None, cfgs, n_lanes=lanes)
+    serve = SimServe()
+    serve.register("tf", sim_cfg=SimConfig(ctx_len=8))
+    handles = [
+        serve.submit(a, "tf", n_lanes=ln, sim_cfg=c)
+        for a, ln, c in zip(arrs, lanes, cfgs)
+    ]
+    serve.drain()
+    for i, h in enumerate(handles):
+        w = h.result()
+        assert w.total_cycles == float(ref["workload_cycles"][i])
+        assert w.overflow == int(ref["workload_overflow"][i])
+
+
 # ----------------------------------------------------------------- cache LRU
 @given(st.lists(st.integers(0, 31), min_size=1, max_size=200))
 @settings(max_examples=30, deadline=None)

@@ -1,9 +1,10 @@
-"""SimNet session API: engine-only routing must reproduce the legacy
-results exactly, typed results must serialize, shims must warn.
+"""SimNet session API: service routing must reproduce the core scan
+exactly, typed results must serialize, the legacy shims must stay gone.
 
-The bit-identity tests are the regression guard for the api_redesign:
-`SimNet.simulate*` routes exclusively through the chunked SimNetEngine
-pack path, and its totals must equal the one-shot core scan's.
+The bit-identity tests are the regression guard for the api_redesign(s):
+`SimNet.simulate*` routes exclusively through the SimServe → SimNetEngine
+pack path (lane-bucketed resident executables), and its totals must equal
+the one-shot core scan's.
 """
 import json
 
@@ -64,28 +65,22 @@ def test_session_heterogeneous_cfgs_bit_identical(traces, arrs):
         assert w.overflow == int(ref["workload_overflow"][i])
 
 
-def test_legacy_dict_path_unchanged(traces):
-    """The deprecated api.simulate_many shim returns the legacy dict shape
-    with totals bit-identical to the session result it wraps."""
-    sn = SimNet()
-    res = sn.simulate_many(traces, n_lanes=1)
-    with pytest.deprecated_call():
-        legacy = api.simulate_many(traces, n_lanes=1)
-    assert legacy == res.to_dict() | {
-        # timing fields are measured per call — compare everything else
-        k: legacy[k] for k in ("throughput_ips", "seconds", "first_call_seconds")
-    }
-    for tr, w in zip(traces, legacy["workloads"]):
-        assert w["total_cycles"] == tr.total_cycles  # golden Eq. 1 cycles
-        assert w["cpi_error"] == 0.0
+def test_teacher_forced_golden_cycles(traces):
+    """One lane per workload teacher-forced: per-workload totals equal the
+    traces' own Eq. 1 golden cycle counts exactly (the invariant the
+    removed legacy shims used to guard)."""
+    res = SimNet().simulate_many(traces, n_lanes=1)
+    for tr, w in zip(traces, res):
+        assert w.total_cycles == tr.total_cycles
+        assert w.cpi_error == 0.0
+    assert res.total_cycles == sum(t.total_cycles for t in traces)
 
 
-def test_legacy_simulate_shim_single_workload(loop_trace):
-    with pytest.deprecated_call():
-        d = api.simulate(loop_trace, None, None, SimConfig(ctx_len=16), n_lanes=1)
-    assert d["total_cycles"] == loop_trace.total_cycles
-    assert set(d) >= {"total_cycles", "cpi", "n_instructions", "n_lanes",
-                      "throughput_ips", "seconds", "overflow", "des_cpi"}
+def test_deprecated_shims_are_gone():
+    """The one-release deprecation window for the loose functions is over
+    (ROADMAP open item): the session/service methods are the only surface."""
+    for name in ("simulate", "simulate_many", "train_predictor"):
+        assert not hasattr(api, name), f"api.{name} should have been removed"
 
 
 def test_results_are_frozen_and_json_ready(traces):
