@@ -382,6 +382,69 @@ def step_throughput(data, quick):
     print(f"[pipeline] serve_zoo: {st['jobs_completed']} jobs over {len(resident)} "
           f"resident models in {serve_wall:.1f}s — cache {out['serve_zoo']['cache']}",
           flush=True)
+
+    # --- step_layout: ring vs roll simulator state layouts ---------------
+    # Steady-state packed step throughput (timeit re-stream of a device-
+    # staged pack) at ctx_len 64. Teacher-forced rows isolate the pure
+    # sim-step state update — the traffic the ring layout attacks; the
+    # predictor rows show the end-to-end effect; the bf16 rows measure the
+    # advertised state_dtype="bfloat16" (totals stay exact teacher-forced:
+    # cycle counters are f32). The analytic traffic model rides along so
+    # the measured ratio can be compared with the roofline term.
+    from repro.core import features as Feat
+    from repro.core.simulator import SimConfig
+    from repro.runtime.roofline import sim_step_traffic
+    from repro.serving.simnet_engine import SimNetEngine
+
+    lay_traces = traces[: 4 if quick else 8]
+    lay_arrs = [Feat.trace_arrays(t) for t in lay_traces]
+    lanes_each = 16  # 64+ packed lanes: the serving-shaped batch size
+    ctx = 64
+    reps = 3  # best-of: sub-second steady passes are scheduler-noisy
+
+    def steady(layout, state_dtype="float32", with_model=False):
+        scfg = SimConfig(ctx_len=ctx, layout=layout, state_dtype=state_dtype)
+        eng = SimNetEngine(
+            art.params if with_model else None,
+            art.pcfg if with_model else None,
+            scfg, cache=CompileCache(),
+        )
+        runs = [
+            eng.simulate_many(lay_arrs, n_lanes=lanes_each, chunk=128, timeit=True)
+            for _ in range(reps)
+        ]
+        r = min(runs, key=lambda x: x["seconds"])
+        return {
+            "layout": layout, "state_dtype": state_dtype,
+            "seconds": r["seconds"], "ips": r["throughput_ips"],
+            "steps_per_second": r["n_steps"] / r["seconds"],
+            "total_cycles": r["total_cycles"],  # layout exactness in plain sight
+        }
+
+    def rows(with_model):
+        rs = [steady(lay, sd, with_model) for lay, sd in
+              (("roll", "float32"), ("ring", "float32"), ("ring", "bfloat16"))]
+        for r in rs:
+            r["speedup_vs_roll"] = rs[0]["seconds"] / r["seconds"]
+        return rs
+
+    tf_rows = rows(with_model=False)
+    pred_rows = rows(with_model=True)
+    out["step_layout"] = {
+        "ctx_len": ctx,
+        "n_workloads": len(lay_arrs),
+        "lanes_per_workload": lanes_each,
+        "teacher_forced": tf_rows,
+        "predictor_c3": pred_rows,
+        "traffic_model": sim_step_traffic(ctx, lanes_each * len(lay_arrs)),
+        "traffic_model_bf16": sim_step_traffic(
+            ctx, lanes_each * len(lay_arrs), state_dtype_bytes=2
+        ),
+    }
+    print(f"[pipeline] step_layout ctx{ctx}: teacher-forced ring "
+          f"{tf_rows[1]['speedup_vs_roll']:.2f}x roll "
+          f"(bf16 {tf_rows[2]['speedup_vs_roll']:.2f}x), predictor ring "
+          f"{pred_rows[1]['speedup_vs_roll']:.2f}x roll", flush=True)
     _save_json("packed_throughput.json", out)
 
 

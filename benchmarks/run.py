@@ -163,6 +163,23 @@ def throughput():
         CSV_ROWS.append(("serve_zoo/cache_hits", 0.0, c["hits"]))
         CSV_ROWS.append(("serve_zoo/cache_misses", 0.0, c["misses"]))
         CSV_ROWS.append(("serve_zoo/compile_seconds", 0.0, c["compile_seconds"]))
+    lay = data.get("step_layout")
+    if lay:
+        print(f"  step layouts (ring vs roll state traffic, ctx_len "
+              f"{lay['ctx_len']}, {lay['n_workloads']}×{lay['lanes_per_workload']} lanes):")
+        for mode in ("teacher_forced", "predictor_c3"):
+            for row in lay.get(mode, []):
+                tag = f"{mode}/{row['layout']}-{row['state_dtype']}"
+                print(f"    {tag:34s} {row['ips']:10.0f} instr/s "
+                      f"({row['seconds']:6.2f}s steady, "
+                      f"{row['speedup_vs_roll']:.2f}x roll)")
+                CSV_ROWS.append((f"step_layout/{tag}", 1e6 / row["ips"],
+                                 row["speedup_vs_roll"]))
+        tm = lay.get("traffic_model")
+        if tm:
+            print(f"    roofline traffic model: roll {tm['roll_bytes_per_step']/1e6:.2f} "
+                  f"MB/step vs ring {tm['ring_bytes_per_step']/1e6:.2f} MB/step "
+                  f"→ {tm['ratio']:.1f}x less queue-state HBM traffic")
 
 
 def table5():

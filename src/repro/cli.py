@@ -101,10 +101,21 @@ def cmd_train(args) -> int:
 
 
 def _session(args) -> SimNet:
+    import dataclasses
+
+    from repro.checkpoint.artifact import PredictorArtifact
+
+    kw = {"use_kernel": bool(getattr(args, "use_kernel", False))}
+    layout = getattr(args, "layout", None)
     if args.artifact:
-        return SimNet.from_artifact(args.artifact)
+        art = PredictorArtifact.load(args.artifact)
+        if layout:  # run the artifact's config under the requested layout
+            kw["sim_cfg"] = dataclasses.replace(art.sim_cfg, layout=layout)
+        return SimNet(art, **kw)
     # teacher-forced: replay the DES labels through the same engine path
-    return SimNet()
+    if layout:
+        kw["sim_cfg"] = SimConfig(layout=layout)
+    return SimNet(**kw)
 
 
 def cmd_simulate(args) -> int:
@@ -192,6 +203,8 @@ def cmd_bench(args) -> int:
     one freshly-compiled engine per workload (the pre-packing behaviour —
     each sequential call gets its own COLD cache, otherwise it would
     free-ride on the shared executable cache it predates)."""
+    import dataclasses
+
     from repro.serving.compile_cache import CompileCache
 
     n = 3000 if args.quick else args.n
@@ -200,8 +213,11 @@ def cmd_bench(args) -> int:
     art = SimNet.from_artifact(args.artifact).artifact if args.artifact else None
 
     def fresh():
-        cache = CompileCache()
-        return SimNet(art, cache=cache) if art else SimNet(cache=cache)
+        kw = {"cache": CompileCache(), "use_kernel": bool(args.use_kernel)}
+        if args.layout:
+            base = art.sim_cfg if art else SimConfig()
+            kw["sim_cfg"] = dataclasses.replace(base, layout=args.layout)
+        return SimNet(art, **kw) if art else SimNet(**kw)
 
     t0 = time.time()
     seq = [fresh().simulate(t, n_lanes=args.lanes, timeit=False) for t in traces]
@@ -230,6 +246,17 @@ def _common(p, n_default=10000):
     p.add_argument("--cache-dir", default="artifacts/traces")
     p.add_argument("--lanes", type=int, default=8)
     p.add_argument("--quick", action="store_true", help="tiny settings (CI smoke)")
+
+
+def _engine_flags(p):
+    p.add_argument("--layout", choices=["ring", "roll"], default=None,
+                   help="simulator step layout (default: the artifact's / "
+                        "SimConfig default; totals are bit-identical, ring "
+                        "is the fast path)")
+    p.add_argument("--use-kernel", action="store_true",
+                   help="run the fused Pallas predictor kernels (with "
+                        "--layout ring and a c3 model: the fully fused "
+                        "sim-step; interpret mode on CPU)")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -261,6 +288,7 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("simulate", help="simulate benchmarks from a saved artifact")
     _common(p)
+    _engine_flags(p)
     p.add_argument("--artifact", default=None,
                    help="PredictorArtifact directory (omit for teacher-forced replay)")
     p.add_argument("--timeit", action="store_true",
@@ -269,6 +297,7 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("sweep", help="design-space sweep in one packed call")
     _common(p)
+    _engine_flags(p)
     p.add_argument("--artifact", default=None,
                    help="PredictorArtifact directory (omit for teacher-forced replay)")
     p.add_argument("--param", choices=["l2", "bpred"], default="l2")
@@ -287,6 +316,7 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("bench", help="packed vs sequential throughput microbench")
     _common(p, n_default=6000)
+    _engine_flags(p)
     p.add_argument("--artifact", default=None)
     p.set_defaults(fn=cmd_bench)
 

@@ -322,6 +322,41 @@ def make_predict_fn(params, cfg: PredictorConfig, use_kernel: bool = False):
     return predict
 
 
+def make_fused_predict_fn(params, cfg: PredictorConfig):
+    """Fused ring-state predictor (kernels/fused_step.py): model-input
+    assembly + the C3 conv trunk run in ONE Pallas kernel straight off the
+    ring-buffer SimState — the (L, 1+Q, 50) input tensor never reaches
+    HBM. The FC head + hybrid decode stay in jnp (tiny GEMMs).
+
+    Signature matches `make_sim_scan`'s ``predict_state_fn``:
+    (state, cur_feat, cur_addr) -> (L, 3) latencies. Requires the ring
+    layout (the kernel reads the global head cursor), kind == "c3" (the
+    kernel fuses exactly that conv depth), and an f32 state: the kernel
+    assembles in f32, so a bf16 ``state_dtype`` would skip the unfused
+    path's bf16 rounding of the dynamic features (the engine gates on
+    this and falls back to the unfused kernel for bf16 state).
+    """
+    if cfg.kind != "c3":
+        raise ValueError(
+            f"fused_step fuses the C3 trunk; got kind={cfg.kind!r} "
+            "(use the unfused use_kernel path for other models)"
+        )
+    from repro.kernels import ops as kops
+
+    conv = [params[f"conv{i}"] for i in range(3)]
+
+    def predict(state, cur_feat, cur_addr):
+        h = kops.fused_step(
+            conv, state, cur_feat, cur_addr, seq_padded=cfg.seq_padded
+        )
+        h = h.reshape(h.shape[0], -1).astype(jnp.float32)
+        h = _dense(params["fc0"], h, act="relu")
+        raw = _dense(params["fc1"], h)
+        return decode_latency(raw, cfg)
+
+    return predict
+
+
 # ---------------------------------------------------------------------------
 # computation intensity (Table 4's "MFlops per inference")
 # ---------------------------------------------------------------------------

@@ -1,10 +1,31 @@
 """Instruction-centric SimNet simulator in JAX (paper §3).
 
-State per lane: a recency-ordered in-flight buffer (slot 0 = newest) that
-plays both paper queues — entries carry an ``in_mw`` flag that flips when a
-retired store moves to the memory-write queue. One `lax.scan` step =
-one instruction: assemble model input from the buffer, predict (or teacher-
-force) the three latencies, advance the clock, retire in order, push.
+State per lane: an in-flight buffer that plays both paper queues — entries
+carry an ``in_mw`` flag that flips when a retired store moves to the
+memory-write queue. One `lax.scan` step = one instruction: assemble model
+input from the buffer, predict (or teacher-force) the three latencies,
+advance the clock, retire in order, push.
+
+Step layouts (``SimConfig.layout``): the buffer state was the simulator's
+dominant HBM roofline term, so TWO physical layouts implement the same
+logical recency-ordered queue:
+
+  "ring" (default) — slots form a ring buffer with a global ``head``
+    write cursor. A push is ONE `dynamic_update_slice` per plane; recency
+    order is recovered by index arithmetic (`recency_view` = flip +
+    cyclic roll) instead of physically moving every plane. Per-step queue
+    traffic for the wide feat/addr planes drops from O(L·Q·F) writes to
+    an O(L·F) slot write (the latency planes are still read in full by
+    retirement, and the small (L, Q) bookkeeping planes still update in
+    place — `runtime.roofline.sim_step_traffic` models the ~16× net).
+  "roll" — the original shift-push layout (slot 0 = physically newest;
+    every plane moves one slot per step). Kept as the exactness
+    reference: the ring step reproduces `_retire`'s recency-ordered
+    retirement decisions in physical order via head-anchored cyclic
+    prefix-sums (`older_count` in `_sim_step_ring`) — exact integer/
+    boolean math, so per-lane totals are bit-identical between the
+    layouts, teacher-forced and predicted (guarded by
+    tests/test_ring_layout.py and a hypothesis property test).
 
 Lanes are the paper's sub-traces: `vmap` over lanes batches the predictor
 inference exactly like the paper's GPU batching; under `pjit` the lane axis
@@ -38,8 +59,18 @@ class SimConfig:
     n_classes: int = 10  # hybrid head classes per latency type
     max_latency: float = 100000.0
     state_dtype: str = "float32"  # "bfloat16" halves the queue-state HBM
-    # traffic — the dominant roofline term of the parallel simulator (§Perf).
-    # Static features/latency-scaled values are all bf16-exact or tolerant.
+    # traffic that the ring layout has not already eliminated; cycle
+    # counters stay f32 so totals are exact (see tests/test_ring_layout).
+    layout: str = "ring"  # "ring" = O(1)-push slot writes + head cursor;
+    # "roll" = shift-push every plane (the original exactness reference).
+    # Totals are bit-identical between the two (the ring step reproduces
+    # the roll retirement decisions with exact integer math — see the
+    # module docstring); layout is part of the compiled executable's
+    # cache identity because SimConfig rides in serving.ExecutableKey.
+
+    def __post_init__(self):
+        if self.layout not in ("ring", "roll"):
+            raise ValueError(f"layout must be 'ring' or 'roll', got {self.layout!r}")
 
 
 class SimState(NamedTuple):
@@ -50,8 +81,24 @@ class SimState(NamedTuple):
     store_lat: jax.Array  # (L, Q) f32 predicted store latency
     valid: jax.Array  # (L, Q) bool
     in_mw: jax.Array  # (L, Q) bool — retired store awaiting memory write
+    is_store_q: jax.Array  # (L, Q) bool — store marker of in-flight entries.
+    # Duplicates feat[:, :, 7] (the Op.STORE one-hot) so retirement never
+    # READS the wide feat plane: in the ring layout a read of a plane that
+    # is then slice-written in place can force XLA into a defensive full
+    # copy, which would hand back the whole O(L·Q·F) traffic the layout
+    # exists to remove.
     cur_tick: jax.Array  # (L,) f32
     overflow: jax.Array  # (L,) i32 force-dropped entries (diagnostic)
+    head: jax.Array  # () i32 ring write cursor (stays 0 in roll layout).
+    # GLOBAL, not per-lane: every step advances it whether or not a lane is
+    # active. A frozen (inactive) lane's plane values never change, and
+    # nothing that survives the freeze — drain, totals, overflow — depends
+    # on recency order, so reinterpreting a frozen buffer under a moved
+    # head is harmless. This assumes inactivity is terminal (pack_workloads
+    # masks only ragged TAILS); a lane that went active again would need
+    # the per-lane-head variant. Being a scalar keeps the push a single
+    # `dynamic_update_slice` (no scatter) and replicates with zero
+    # communication under the mesh.
 
 
 def init_state(n_lanes: int, cfg: SimConfig) -> SimState:
@@ -65,13 +112,42 @@ def init_state(n_lanes: int, cfg: SimConfig) -> SimState:
         store_lat=jnp.zeros((L, Q), jnp.float32),
         valid=jnp.zeros((L, Q), bool),
         in_mw=jnp.zeros((L, Q), bool),
+        is_store_q=jnp.zeros((L, Q), bool),
         cur_tick=jnp.zeros((L,), jnp.float32),
         overflow=jnp.zeros((L,), jnp.int32),
+        head=jnp.zeros((), jnp.int32),
     )
 
 
+def recency_view(state: SimState) -> SimState:
+    """Ring-layout state reordered so index 0 = newest (the roll layout's
+    physical invariant): recency r lives at slot (head - 1 - r) mod Q,
+    which is a flip followed by a cyclic roll — two slices, no gather.
+    Values are moved, never recomputed, so anything derived from the view
+    is bit-identical to the roll path."""
+
+    def rec(a):
+        return jnp.flip(jnp.roll(a, -state.head, axis=1), axis=1)
+
+    return state._replace(
+        feat=rec(state.feat), addr=rec(state.addr), resid=rec(state.resid),
+        exec_lat=rec(state.exec_lat), store_lat=rec(state.store_lat),
+        valid=rec(state.valid), in_mw=rec(state.in_mw),
+        is_store_q=rec(state.is_store_q),
+    )
+
+
+def model_input(state: SimState, cur_feat, cur_addr, cfg: SimConfig):
+    """Layout-aware input assembly: recency-order the ring state first."""
+    if cfg.layout == "ring":
+        state = recency_view(state)
+    return build_model_input(state, cur_feat, cur_addr)
+
+
 def build_model_input(state: SimState, cur_feat, cur_addr):
-    """Assemble (L, 1+Q, 50): current instruction + context, recency order."""
+    """Assemble (L, 1+Q, 50): current instruction + context, recency order
+    (the state must already be recency-ordered — i.e. roll layout, or a
+    ring state through `recency_view`)."""
     L, Q, _ = state.feat.shape
     sd = state.feat.dtype
     dep = jnp.logical_and(
@@ -120,6 +196,47 @@ def _lane_where(active, new, old):
     return jnp.where(a, new, old)
 
 
+def _clip_lats(cur, lats, cfg: SimConfig):
+    """Round/clip the three predicted latencies (shared by both layouts)."""
+    fetch, exec_lat, store_lat = lats[:, 0], lats[:, 1], lats[:, 2]
+    fetch = jnp.clip(jnp.round(fetch), 0, cfg.max_latency)
+    exec_lat = jnp.clip(jnp.round(exec_lat), 1, cfg.max_latency)
+    store_lat = jnp.where(
+        cur["is_store"], jnp.clip(jnp.round(store_lat), 1, cfg.max_latency), 0.0
+    )
+    return fetch, exec_lat, store_lat
+
+
+def _retire(valid, in_mw, resid, exec_lat, store_lat, is_store, fetch, cfg,
+            retire_width):
+    """Both paper queues' retirement over RECENCY-ordered (L, Q) planes
+    (index 0 = newest) — the roll layout's in-place path. The ring layout
+    reproduces exactly these decisions in physical order via cyclic
+    prefix-sums (see `_sim_step_ring.older_count`): integer/boolean math
+    only, so the two layouts stay bit-identical."""
+    # --- processor-queue retirement: in-order, bandwidth-limited ---
+    rw = jnp.asarray(cfg.retire_width, jnp.float32) if retire_width is None else retire_width.astype(jnp.float32)
+    budget = (rw * jnp.maximum(fetch, 1.0)).astype(jnp.int32)  # (L,)
+    proc = valid & ~in_mw
+    ready_p = proc & (resid >= exec_lat)
+    blocked = proc & ~ready_p
+    eligible = ready_p & ~_suffix_any(blocked)
+    retire_p = eligible & (_suffix_count(eligible) < budget[:, None])
+    # retired stores move to the memory-write queue; others leave
+    to_mw = retire_p & is_store
+    in_mw = in_mw | to_mw
+    valid = valid & ~(retire_p & ~to_mw)
+
+    # --- memory-write queue retirement: in-order, unlimited ---
+    mw = valid & in_mw
+    ready_m = mw & (resid >= store_lat)
+    blocked_m = mw & ~ready_m
+    retire_m = ready_m & ~_suffix_any(blocked_m)
+    valid = valid & ~retire_m
+    in_mw = in_mw & valid
+    return valid, in_mw
+
+
 def sim_step(
     state: SimState,
     cur,
@@ -142,38 +259,22 @@ def sim_step(
         pushed past it are force-dropped and counted in ``overflow`` exactly
         as a standalone run with that smaller ctx_len would.
     """
-    fetch, exec_lat, store_lat = lats[:, 0], lats[:, 1], lats[:, 2]
-    fetch = jnp.clip(jnp.round(fetch), 0, cfg.max_latency)
-    exec_lat = jnp.clip(jnp.round(exec_lat), 1, cfg.max_latency)
-    store_lat = jnp.where(
-        cur["is_store"], jnp.clip(jnp.round(store_lat), 1, cfg.max_latency), 0.0
-    )
+    if cfg.layout == "ring":
+        return _sim_step_ring(
+            state, cur, lats, cfg,
+            active=active, retire_width=retire_width, lane_ctx=lane_ctx,
+        )
+    fetch, exec_lat, store_lat = _clip_lats(cur, lats, cfg)
 
     # clock + residence advance
     cur_tick = state.cur_tick + fetch
     resid = state.resid + jnp.where(state.valid, fetch[:, None], 0.0)
 
-    # --- processor-queue retirement: in-order, bandwidth-limited ---
-    rw = jnp.asarray(cfg.retire_width, jnp.float32) if retire_width is None else retire_width.astype(jnp.float32)
-    budget = (rw * jnp.maximum(fetch, 1.0)).astype(jnp.int32)  # (L,)
-    proc = state.valid & ~state.in_mw
-    ready_p = proc & (resid >= state.exec_lat)
-    blocked = proc & ~ready_p
-    eligible = ready_p & ~_suffix_any(blocked)
-    retire_p = eligible & (_suffix_count(eligible) < budget[:, None])
-    # retired stores move to the memory-write queue; others leave
-    # (op one-hot position 7 == Op.STORE marks stores in the static block)
-    to_mw = retire_p & state.feat[:, :, 7].astype(bool)
-    in_mw = state.in_mw | to_mw
-    valid = state.valid & ~(retire_p & ~to_mw)
-
-    # --- memory-write queue retirement: in-order, unlimited ---
-    mw = valid & in_mw
-    ready_m = mw & (resid >= state.store_lat)
-    blocked_m = mw & ~ready_m
-    retire_m = ready_m & ~_suffix_any(blocked_m)
-    valid = valid & ~retire_m
-    in_mw = in_mw & valid
+    # roll layout: slot index IS recency order, retire in place
+    valid, in_mw = _retire(
+        state.valid, state.in_mw, resid, state.exec_lat, state.store_lat,
+        state.is_store_q, fetch, cfg, retire_width,
+    )
 
     # --- push current instruction at slot 0 (roll the buffer) ---
     Q = state.valid.shape[1]
@@ -203,14 +304,131 @@ def sim_step(
         store_lat=push(state.store_lat, store_lat),
         valid=valid_new,
         in_mw=in_mw_new,
+        is_store_q=push(state.is_store_q, cur["is_store"]),
         cur_tick=cur_tick,
         overflow=overflow,
+        head=state.head,
     )
     if active is None:
         return new_state
-    return SimState(*[
-        _lane_where(active, n, o) for n, o in zip(new_state, state)
-    ])
+    # head is a global scalar (last field) — lane-select every other plane
+    merged = [_lane_where(active, n, o)
+              for n, o in zip(new_state[:-1], state[:-1])]
+    return SimState(*merged, state.head)
+
+
+def _sim_step_ring(
+    state: SimState,
+    cur,
+    lats,
+    cfg: SimConfig,
+    *,
+    active: Optional[jax.Array] = None,
+    retire_width: Optional[jax.Array] = None,
+    lane_ctx: Optional[jax.Array] = None,
+) -> SimState:
+    """Ring-layout step: identical semantics to the roll step, but the push
+    is ONE `dynamic_update_slice` at the global ``head`` cursor instead of
+    shifting every plane, and retirement runs directly in PHYSICAL order:
+    "how many set entries are strictly older (in recency) than slot p" is
+    a cyclic prefix-sum anchored at the head cursor, so the roll layout's
+    reversed cumsums (`_suffix_any`/`_suffix_count` over recency order)
+    are reproduced with exact integer arithmetic and zero permutation
+    traffic. The heavy (L, Q, F) feat/addr planes and the latency planes
+    are only ever written at the pushed slot."""
+    L, Q = state.valid.shape
+    fetch, exec_lat, store_lat = _clip_lats(cur, lats, cfg)
+
+    # clock + residence advance (physical order: elementwise, no reorder)
+    cur_tick = state.cur_tick + fetch
+    resid = state.resid + jnp.where(state.valid, fetch[:, None], 0.0)
+
+    head = state.head  # () i32 — global write cursor (= step count mod Q)
+    slot = jnp.arange(Q, dtype=head.dtype)[None, :]
+
+    def older_count(x):
+        """Per slot: how many set entries of ``x`` are OLDER in recency.
+        Physical cyclic order runs oldest→newest from the head cursor, so
+        the count is the cyclic-range sum over [head, p) — exact int32,
+        bit-for-bit the roll layout's `_suffix_count` over recency order."""
+        xi = x.astype(jnp.int32)
+        cs = jnp.cumsum(xi, axis=-1)
+        excl = cs - xi  # exclusive prefix sum in physical order
+        total = cs[:, -1:]
+        at_head = jax.lax.dynamic_slice_in_dim(excl, head, 1, axis=1)  # (L, 1)
+        return jnp.where(slot >= head, excl - at_head, total - at_head + excl)
+
+    # --- processor-queue retirement: in-order, bandwidth-limited ---
+    rw = jnp.asarray(cfg.retire_width, jnp.float32) if retire_width is None else retire_width.astype(jnp.float32)
+    budget = (rw * jnp.maximum(fetch, 1.0)).astype(jnp.int32)  # (L,)
+    proc = state.valid & ~state.in_mw
+    ready_p = proc & (resid >= state.exec_lat)
+    blocked = proc & ~ready_p
+    eligible = ready_p & (older_count(blocked) == 0)
+    retire_p = eligible & (older_count(eligible) < budget[:, None])
+    # retired stores move to the memory-write queue; others leave
+    to_mw = retire_p & state.is_store_q
+    in_mw_p = state.in_mw | to_mw
+    valid_p = state.valid & ~(retire_p & ~to_mw)
+
+    # --- memory-write queue retirement: in-order, unlimited ---
+    mw = valid_p & in_mw_p
+    ready_m = mw & (resid >= state.store_lat)
+    blocked_m = mw & ~ready_m
+    retire_m = ready_m & (older_count(blocked_m) == 0)
+    valid_p = valid_p & ~retire_m
+    in_mw_p = in_mw_p & valid_p
+
+    # push accounting (recency index r lives at slot (head - 1 - r) mod Q)
+    if lane_ctx is None:
+        # the oldest entry sits AT the head slot, about to be overwritten
+        at_cap = jax.lax.dynamic_slice_in_dim(valid_p, head, 1, axis=1)[:, 0]
+    else:
+        cap_slot = (head - lane_ctx.astype(head.dtype)) % Q  # (L,)
+        at_cap = jnp.take_along_axis(valid_p, cap_slot[:, None], axis=1)[:, 0]
+        # entries whose post-push recency would reach the lane's capacity
+        # are force-dropped now (the new entry itself is always kept)
+        age = (head - 1 - slot) % Q  # (1, Q) — lane-independent
+        keep = age < (lane_ctx[:, None] - 1)
+        valid_p = valid_p & keep
+        in_mw_p = in_mw_p & keep
+    overflow = state.overflow + at_cap.astype(jnp.int32)
+
+    # freeze inactive lanes on the planes that were rewritten above; the
+    # wide planes below are only touched at the push slot, where the write
+    # itself is made conditional — no full-plane select needed for them
+    if active is not None:
+        resid = _lane_where(active, resid, state.resid)
+        valid_p = _lane_where(active, valid_p, state.valid)
+        in_mw_p = _lane_where(active, in_mw_p, state.in_mw)
+        cur_tick = jnp.where(active, cur_tick, state.cur_tick)
+        overflow = jnp.where(active, overflow, state.overflow)
+
+    # --- O(1) push: one head-slot slice write per plane ---
+    def put(buf, new):
+        """Write the (L, 1, ...) head slot; inactive lanes keep theirs."""
+        new = new[:, None].astype(buf.dtype)
+        if active is not None:
+            old = jax.lax.dynamic_slice_in_dim(buf, head, 1, axis=1)
+            sel = active.reshape((L, 1) + (1,) * (new.ndim - 2))
+            new = jnp.where(sel, new, old)
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, head, axis=1)
+
+    return SimState(
+        feat=put(state.feat, cur["feat"]),
+        addr=put(state.addr, cur["addr"]),
+        resid=put(resid, jnp.zeros_like(fetch)),
+        exec_lat=put(state.exec_lat, exec_lat),
+        store_lat=put(state.store_lat, store_lat),
+        valid=put(valid_p, jnp.ones((L,), bool)),
+        in_mw=put(in_mw_p, jnp.zeros((L,), bool)),
+        is_store_q=put(state.is_store_q, cur["is_store"]),
+        cur_tick=cur_tick,
+        overflow=overflow,
+        # the cursor is global: it advances past frozen lanes too (their
+        # plane values are frozen; nothing after a freeze reads recency)
+        head=(head + 1) % Q,
+    )
 
 
 def drain_cycles(state: SimState) -> jax.Array:
@@ -227,6 +445,7 @@ def make_sim_scan(
     retire_width: Optional[jax.Array] = None,
     lane_ctx: Optional[jax.Array] = None,
     emit_outputs: bool = True,
+    predict_state_fn: Optional[Callable] = None,
 ):
     """Returns scan_fn(state, trace_chunk) -> (state, per-step outputs).
 
@@ -234,6 +453,10 @@ def make_sim_scan(
     plus an optional per-step "active" (T, L) bool lane mask (packed mode).
     predict_fn: (L, 1+Q, 50) -> (L, 3) latencies. None = teacher forcing
     (dataset-builder mode: emits the assembled model inputs instead).
+    predict_state_fn: (state, cur_feat, cur_addr) -> (L, 3) latencies —
+    the fused-kernel entry: input assembly happens INSIDE the predictor
+    (ring layout + `kernels.ops.fused_step`), so the (L, 1+Q, 50) tensor
+    never materializes in HBM. Overrides predict_fn when given.
     retire_width / lane_ctx: per-lane SimConfig overrides (see sim_step).
     emit_outputs=False scans with empty per-step outputs — the packed
     multi-workload path uses this so memory stays O(state), not O(T).
@@ -241,11 +464,14 @@ def make_sim_scan(
 
     def step(state, xs):
         cur = {"feat": xs["feat"], "addr": xs["addr"], "is_store": xs["is_store"]}
-        if predict_fn is None:
+        if predict_state_fn is not None:
+            lats = predict_state_fn(state, cur["feat"], cur["addr"])
+            out = {"lats": lats} if emit_outputs else {}
+        elif predict_fn is None:
             lats = xs["labels"]
-            out = {"x": build_model_input(state, cur["feat"], cur["addr"])} if emit_outputs else {}
+            out = {"x": model_input(state, cur["feat"], cur["addr"], cfg)} if emit_outputs else {}
         else:
-            x = build_model_input(state, cur["feat"], cur["addr"])
+            x = model_input(state, cur["feat"], cur["addr"], cfg)
             lats = predict_fn(x)  # sim_step zeroes store latency for non-stores
             out = {"lats": lats} if emit_outputs else {}
         new_state = sim_step(

@@ -1,8 +1,13 @@
 # Pallas TPU kernels for the compute hot-spots the paper optimizes:
 #   conv2s      — SimNet CNN building block (k2s2 conv + bias + ReLU)
 #   cnn_trunk   — whole C3 trunk fused, VMEM-resident (beyond-paper)
+#   fused_step  — ONE fused sim-step inference off the ring-buffer state:
+#                 recency reorder + model-input assembly + the C3 trunk in
+#                 one kernel; the (L, 1+Q, 50) input never touches HBM
+#                 (requires SimConfig.layout="ring"; beyond-paper)
 #   decode_attn — flash-decode GQA for the serving cells (beyond-paper)
 # ops.py holds the jit'd padded wrappers; ref.py the pure-jnp oracles.
+# interpret=True on CPU — every kernel body runs and is tested everywhere.
 from repro.kernels import ops, ref
 
 __all__ = ["ops", "ref"]

@@ -17,6 +17,7 @@ import numpy as np
 from repro.kernels.cnn_trunk import cnn_trunk_pallas
 from repro.kernels.conv2s import conv2s_pallas
 from repro.kernels.decode_attn import decode_attn_pallas
+from repro.kernels.fused_step import fused_step_pallas
 
 
 def _interpret() -> bool:
@@ -68,6 +69,42 @@ def cnn_trunk(layer_params: Sequence[dict], x, *, lane_tile: int = 64):
         weights.append((w, b))
         c_in = w.shape[1]
     out = cnn_trunk_pallas(x, weights, lane_tile=lane_tile, interpret=_interpret())
+    return out[:B0]
+
+
+@functools.partial(jax.jit, static_argnames=("seq_padded", "lane_tile"))
+def fused_step(layer_params: Sequence[dict], state, cur_feat, cur_addr, *,
+               seq_padded: int, lane_tile: int = 64):
+    """Fused ring-state sim-step trunk: recency reorder + model-input
+    assembly + the whole C3 conv stack in one kernel, VMEM-resident (the
+    (L, 1+Q, 50) input never reaches HBM). ``state`` is a ring-layout
+    `core.simulator.SimState` (duck-typed: only the queue planes and the
+    global ``head`` cursor are read). Returns (L, seq_padded//8, C3)."""
+    B0 = cur_feat.shape[0]
+    TB = min(lane_tile, B0)
+    planes = [
+        state.feat.astype(jnp.float32),
+        state.addr,
+        state.resid.astype(jnp.float32),
+        state.exec_lat.astype(jnp.float32),
+        state.store_lat.astype(jnp.float32),
+        state.valid.astype(jnp.float32),
+    ]
+    # dead pad lanes: valid stays 0 → their context rows assemble to zero
+    planes = [_pad_axis(p, 0, TB)[0] for p in planes]
+    cur_feat, _ = _pad_axis(cur_feat.astype(jnp.float32), 0, TB)
+    cur_addr, _ = _pad_axis(cur_addr, 0, TB)
+    # channel-pad the first conv weight to the kernel's 64-wide input pad
+    weights = []
+    c_in = 64
+    for lp in layer_params:
+        w, b = _pad_channels(lp["w"].astype(jnp.float32), lp["b"].astype(jnp.float32), c_in)
+        weights.append((w, b))
+        c_in = w.shape[1]
+    out = fused_step_pallas(
+        *planes, state.head.reshape(1), cur_feat, cur_addr, weights,
+        seq_padded=seq_padded, lane_tile=TB, interpret=_interpret(),
+    )
     return out[:B0]
 
 

@@ -12,7 +12,9 @@ Two mechanisms fix that:
    `ExecutableKey` — (PredictorConfig, SimConfig, lane bucket, chunk,
    mesh, kernel flag) — never by the weights. Every model of the same
    kind/ctx reuses one executable; teacher-forced runs key on
-   ``predictor=None``.
+   ``predictor=None``. The step layout (``SimConfig.layout``: ring vs
+   roll) rides in the SimConfig, so the two layouts' compiled programs
+   never collide in the cache.
 2. **Bucketing.** Lane counts round up to power-of-two buckets (dead
    lanes ride along fully masked via the ``active`` input, so totals are
    bit-identical — see `pad_packed_lanes`), and the streaming chunk
@@ -80,7 +82,8 @@ class ExecutableKey:
 
     def describe(self) -> str:
         kind = self.predictor.kind if self.predictor is not None else "teacher-forced"
-        return f"{kind}/ctx{self.sim_cfg.ctx_len}/L{self.n_lanes}/T{self.chunk}"
+        return (f"{kind}/ctx{self.sim_cfg.ctx_len}/{self.sim_cfg.layout}"
+                f"/L{self.n_lanes}/T{self.chunk}")
 
 
 class CompileCache:

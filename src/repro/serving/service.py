@@ -219,6 +219,18 @@ class SimServe:
             # a mismatch must fail loudly here, not simulate with the
             # engine's values
             eng_cfg = self.registry.get(model_id).sim_cfg
+            if sim_cfg.layout != eng_cfg.layout:
+                # the step layout is compiled into the resident executable
+                # (it rides the compile-cache key) and cannot replay per
+                # lane — name it specifically rather than the generic
+                # config-mismatch message below
+                raise ValueError(
+                    f"job SimConfig layout {sim_cfg.layout!r} differs from "
+                    f"resident model {model_id!r} layout {eng_cfg.layout!r}: "
+                    "a resident engine runs ONE step layout — submit with "
+                    "the engine's layout or register a model with the "
+                    "wanted one"
+                )
             if dataclasses.replace(
                 sim_cfg, ctx_len=eng_cfg.ctx_len, retire_width=eng_cfg.retire_width
             ) != eng_cfg:

@@ -35,7 +35,12 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import features as F
-from repro.core.predictor import PredictorConfig, apply_raw, decode_latency
+from repro.core.predictor import (
+    PredictorConfig,
+    apply_raw,
+    decode_latency,
+    make_fused_predict_fn,
+)
 from repro.core.simulator import (
     SimConfig,
     SimState,
@@ -65,7 +70,12 @@ def lane_sharding(mesh):
 
 def state_shardings(mesh):
     lanes = lane_sharding(mesh)
-    return SimState(*[lanes for _ in SimState._fields])
+    # every plane is lane-sharded except the scalar ring cursor, which is
+    # replicated (each device advances it identically — no communication)
+    return SimState(**{
+        f: NamedSharding(mesh, P()) if f == "head" else lanes
+        for f in SimState._fields
+    })
 
 
 def chunk_specs(n_lanes: int, chunk: int):
@@ -117,14 +127,27 @@ class SimNetEngine:
         self._params_staged = params is None  # nothing to stage teacher-forced
 
         def run_chunk(p, state: SimState, xs, retire_width, lane_ctx):
-            predict = None
+            predict = predict_state = None
             if self.pcfg is not None:
-                def predict(x):
-                    raw = apply_raw(p, x, self.pcfg, use_kernel=self.use_kernel)
-                    return decode_latency(raw, self.pcfg)
+                if (use_kernel and self.sim_cfg.layout == "ring"
+                        and self.pcfg.kind == "c3"
+                        and self.sim_cfg.state_dtype == "float32"):
+                    # fused sim-step: assembly + conv trunk in one Pallas
+                    # kernel off the ring buffer; the model input never
+                    # materializes in HBM. f32 state only: the kernel
+                    # assembles in f32, while the unfused path rounds the
+                    # dynamic features through the state dtype — a bf16
+                    # state would diverge from use_kernel=False, so it
+                    # falls back to the unfused kernel path below.
+                    predict_state = make_fused_predict_fn(p, self.pcfg)
+                else:
+                    def predict(x):
+                        raw = apply_raw(p, x, self.pcfg, use_kernel=self.use_kernel)
+                        return decode_latency(raw, self.pcfg)
             step = make_sim_scan(
                 predict, self.sim_cfg,
                 retire_width=retire_width, lane_ctx=lane_ctx, emit_outputs=False,
+                predict_state_fn=predict_state,
             )
             state, _ = jax.lax.scan(step, state, xs)
             return state

@@ -60,6 +60,74 @@ class TestCnnTrunk:
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
 
 
+class TestFusedStep:
+    """fused_step (ring-state assembly + C3 trunk in one kernel) against
+    the unfused reference: `model_input` → `apply_raw` → decode."""
+
+    @staticmethod
+    def _populated_state(L, ctx, n_steps=24, seed=0):
+        import numpy as np
+
+        from repro.core import features as F
+        from repro.core.simulator import SimConfig, init_state, sim_step
+
+        rng = np.random.default_rng(seed)
+        cfg = SimConfig(ctx_len=ctx, layout="ring")
+        state = init_state(L, cfg)
+        for _ in range(n_steps):
+            is_store = rng.random(L) < 0.3
+            feat = (rng.random((L, F.STATIC_END)) *
+                    (rng.random((L, F.STATIC_END)) < 0.3)).astype(np.float32)
+            feat[:, 7] = is_store
+            cur = {
+                "feat": jnp.asarray(feat),
+                "addr": jnp.asarray(rng.integers(0, 20, (L, F.N_ADDR_KEYS)), jnp.int32),
+                "is_store": jnp.asarray(is_store),
+            }
+            lats = jnp.asarray(rng.integers(0, 12, (L, 3)), jnp.float32)
+            state = sim_step(state, cur, lats, cfg)
+        return cfg, state, cur
+
+    @pytest.mark.parametrize("L,ctx", [
+        (4, 16),
+        pytest.param(7, 8, marks=pytest.mark.slow),    # lane padding path
+        pytest.param(130, 16, marks=pytest.mark.slow),  # multi-tile grid
+    ])
+    def test_fused_equals_unfused_reference(self, L, ctx):
+        from repro.core.predictor import (
+            PredictorConfig,
+            init_predictor,
+            make_fused_predict_fn,
+            make_predict_fn,
+        )
+        from repro.core.simulator import model_input
+
+        pcfg = PredictorConfig(kind="c3", ctx_len=ctx)
+        params, _ = init_predictor(jax.random.PRNGKey(1), pcfg)
+        cfg, state, cur = self._populated_state(L, ctx)
+        ref = make_predict_fn(params, pcfg)(
+            model_input(state, cur["feat"], cur["addr"], cfg)
+        )
+        out = make_fused_predict_fn(params, pcfg)(
+            state, cur["feat"], cur["addr"]
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5
+        )
+
+    def test_requires_c3(self):
+        from repro.core.predictor import (
+            PredictorConfig,
+            init_predictor,
+            make_fused_predict_fn,
+        )
+
+        pcfg = PredictorConfig(kind="c1", ctx_len=8)
+        params, _ = init_predictor(jax.random.PRNGKey(0), pcfg)
+        with pytest.raises(ValueError, match="C3"):
+            make_fused_predict_fn(params, pcfg)
+
+
 class TestDecodeAttn:
     @pytest.mark.parametrize("B,H,KV,hd,S", [
         (1, 4, 4, 16, 64),     # MHA

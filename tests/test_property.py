@@ -152,6 +152,41 @@ def test_packed_workloads_match_separate_runs(jobs):
 @given(
     st.lists(
         st.tuples(
+            st.integers(8, 48),  # T instructions (ragged across jobs)
+            st.integers(1, 4),  # lanes
+            st.integers(0, 100),  # workload seed
+            st.sampled_from([4, 8, 16]),  # per-job ctx_len (→ lane_ctx)
+            st.integers(1, 4),  # per-job retire_width
+        ),
+        min_size=1,
+        max_size=4,
+    )
+)
+@settings(max_examples=10, deadline=None)
+def test_ring_layout_bit_identical_to_roll(jobs):
+    """Tentpole invariant: the ring step layout's packed per-lane and
+    per-workload totals are BIT-IDENTICAL to the roll layout's for random
+    traces, ragged lengths, and heterogeneous retire_width / lane_ctx."""
+    arrs = [_synthetic_arrs(T, seed) for T, _, seed, _, _ in jobs]
+    lanes = [min(ln, T) for T, ln, _, _, _ in jobs]
+
+    def run(layout):
+        cfgs = [
+            SimConfig(ctx_len=ctx, retire_width=rw, layout=layout)
+            for _, _, _, ctx, rw in jobs
+        ]
+        return simulate_many(arrs, None, cfgs, n_lanes=lanes)
+
+    roll, ring = run("roll"), run("ring")
+    for k in ("lane_cycles", "workload_cycles", "workload_overflow"):
+        np.testing.assert_array_equal(
+            np.asarray(roll[k]), np.asarray(ring[k]), err_msg=k
+        )
+
+
+@given(
+    st.lists(
+        st.tuples(
             st.integers(8, 64),  # T instructions
             st.integers(1, 5),  # lanes (buckets to 1/2/4/8 with dead lanes)
             st.integers(0, 100),  # workload seed

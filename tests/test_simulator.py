@@ -12,9 +12,18 @@ from repro.core.simulator import (
     build_model_input,
     drain_cycles,
     init_state,
+    model_input,
+    recency_view,
     sim_step,
     simulate_trace,
 )
+
+pytestmark_layouts = pytest.mark.parametrize("layout", ["roll", "ring"])
+
+
+def _rec(state, cfg):
+    """State with slot 0 = newest regardless of physical layout."""
+    return recency_view(state) if cfg.layout == "ring" else state
 
 
 def test_teacher_forced_matches_eq1_exactly(small_trace):
@@ -33,13 +42,14 @@ def test_parallel_lanes_close_to_sequential(small_trace):
     assert abs(par - seq) / seq < 0.1
 
 
-def test_model_input_layout(small_trace):
+@pytestmark_layouts
+def test_model_input_layout(small_trace, layout):
     arrs = F.trace_arrays(small_trace)
-    cfg = SimConfig(ctx_len=8)
+    cfg = SimConfig(ctx_len=8, layout=layout)
     state = init_state(1, cfg)
     cur_feat = jnp.asarray(arrs["feat"][:1])
     cur_addr = jnp.asarray(arrs["addr"][:1])
-    x = build_model_input(state, cur_feat, cur_addr)
+    x = model_input(state, cur_feat, cur_addr, cfg)
     assert x.shape == (1, 9, 50)
     assert float(x[0, 0, F.IDX_VALID]) == 1.0  # current row valid
     assert float(x[0, 1:, F.IDX_VALID].sum()) == 0.0  # empty context
@@ -48,16 +58,17 @@ def test_model_input_layout(small_trace):
     lats = jnp.asarray([[2.0, 5.0, 0.0]])
     cur = {"feat": cur_feat, "addr": cur_addr, "is_store": jnp.asarray([False])}
     state = sim_step(state, cur, lats, cfg)
-    x2 = build_model_input(state, cur_feat, cur_addr)
+    x2 = model_input(state, cur_feat, cur_addr, cfg)
     assert float(x2[0, 1, F.IDX_VALID]) == 1.0
     assert float(x2[0, 1, F.IDX_EXEC]) == pytest.approx(5.0 * F.LAT_SCALE)
     # same pc → dependency flags fire
     assert float(x2[0, 1, F.IDX_DEP]) == 1.0
 
 
-def test_retirement_in_order():
+@pytestmark_layouts
+def test_retirement_in_order(layout):
     """A ready-younger entry must NOT retire past an unready-older one."""
-    cfg = SimConfig(ctx_len=4, retire_width=8)
+    cfg = SimConfig(ctx_len=4, retire_width=8, layout=layout)
     state = init_state(1, cfg)
     feat = jnp.zeros((1, F.STATIC_END))
     addr = jnp.zeros((1, F.N_ADDR_KEYS), jnp.int32)
@@ -67,12 +78,14 @@ def test_retirement_in_order():
     state = sim_step(state, cur, jnp.asarray([[0.0, 1.0, 0.0]]), cfg)
     # advance clock a lot: fetch latency 50
     state = sim_step(state, cur, jnp.asarray([[50.0, 1.0, 0.0]]), cfg)
-    # slot 1 = younger (exec 1, resid 50 → ready), slot 2 = older (exec 100, not ready)
-    assert bool(state.valid[0, 1]) and bool(state.valid[0, 2])
+    # recency 1 = younger (exec 1, resid 50 → ready), 2 = older (not ready)
+    rec = _rec(state, cfg)
+    assert bool(rec.valid[0, 1]) and bool(rec.valid[0, 2])
 
 
-def test_store_moves_to_memory_write_queue():
-    cfg = SimConfig(ctx_len=4, retire_width=8)
+@pytestmark_layouts
+def test_store_moves_to_memory_write_queue(layout):
+    cfg = SimConfig(ctx_len=4, retire_width=8, layout=layout)
     state = init_state(1, cfg)
     feat = np.zeros((1, F.STATIC_END), np.float32)
     feat[0, 7] = 1.0  # Op.STORE one-hot
@@ -82,14 +95,16 @@ def test_store_moves_to_memory_write_queue():
     ncur = {"feat": jnp.zeros((1, F.STATIC_END)), "addr": addr, "is_store": jnp.asarray([False])}
     # advance 5 cycles: store's exec (2) done → retires to MW queue, stays valid
     state = sim_step(state, ncur, jnp.asarray([[5.0, 1.0, 0.0]]), cfg)
-    assert bool(state.valid[0, 1]) and bool(state.in_mw[0, 1])
+    rec = _rec(state, cfg)
+    assert bool(rec.valid[0, 1]) and bool(rec.in_mw[0, 1])
     # advance 30 cycles: store write (20) done → leaves
     state = sim_step(state, ncur, jnp.asarray([[30.0, 1.0, 0.0]]), cfg)
-    assert not bool(state.valid[0, 2])
+    assert not bool(_rec(state, cfg).valid[0, 2])
 
 
-def test_drain_accounts_remaining_work():
-    cfg = SimConfig(ctx_len=4)
+@pytestmark_layouts
+def test_drain_accounts_remaining_work(layout):
+    cfg = SimConfig(ctx_len=4, layout=layout)
     state = init_state(1, cfg)
     feat = jnp.zeros((1, F.STATIC_END))
     addr = jnp.zeros((1, F.N_ADDR_KEYS), jnp.int32)
@@ -105,8 +120,9 @@ def test_suffix_helpers():
     np.testing.assert_array_equal(np.asarray(_suffix_count(x))[0], [1, 1, 0, 0])
 
 
-def test_overflow_counted():
-    cfg = SimConfig(ctx_len=2)
+@pytestmark_layouts
+def test_overflow_counted(layout):
+    cfg = SimConfig(ctx_len=2, layout=layout)
     state = init_state(1, cfg)
     feat = jnp.zeros((1, F.STATIC_END))
     addr = jnp.zeros((1, F.N_ADDR_KEYS), jnp.int32)
