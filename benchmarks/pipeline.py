@@ -383,6 +383,71 @@ def step_throughput(data, quick):
           f"resident models in {serve_wall:.1f}s — cache {out['serve_zoo']['cache']}",
           flush=True)
 
+    # --- serve_async: background drain loop vs sequential drain ----------
+    # N threaded clients submit a (model × workload) grid against the
+    # running drain loop (max_wait_ms batch window, round-robin across
+    # models) vs the same grid dispatched one-batch-per-job sequentially:
+    # totals must match bit-for-bit, jobs/batch is the packing win. Both
+    # sides ride the warm serve_cache so this measures scheduling, not
+    # compiles.
+    import threading
+
+    async_models = resident[:2] if len(resident) >= 2 else resident
+    if async_models:
+        grid = [(mid, tr) for mid in async_models for tr in serve_traces]
+        n_clients = 4
+
+        seq_serve = SimServe(cache=serve_cache)
+        for mid in async_models:
+            seq_serve.register(mid, str(ART / "models" / mid))
+        t0 = time.time()
+        seq_totals = {}
+        for mid, tr in grid:
+            h = seq_serve.submit(tr, mid, n_lanes=lanes)
+            seq_serve.drain()  # one batch per job: the no-async baseline
+            seq_totals[(mid, tr.name)] = h.result().total_cycles
+        seq_wall = time.time() - t0
+
+        async_serve = SimServe(cache=serve_cache, max_wait_ms=10.0)
+        for mid in async_models:
+            async_serve.register(mid, str(ART / "models" / mid))
+        async_totals = {}
+
+        def client(c):
+            hs = [(mid, tr.name, async_serve.submit(tr, mid, n_lanes=lanes))
+                  for mid, tr in grid[c::n_clients]]
+            for mid, name, h in hs:
+                async_totals[(mid, name)] = h.result(timeout=600).total_cycles
+
+        t0 = time.time()
+        with async_serve:
+            clients = [threading.Thread(target=client, args=(c,))
+                       for c in range(n_clients)]
+            for t in clients:
+                t.start()
+            for t in clients:
+                t.join()
+        async_wall = time.time() - t0
+        ast = async_serve.stats()
+        out["serve_async"] = {
+            "models": async_models,
+            "n_clients": n_clients,
+            "n_jobs": len(grid),
+            "totals_match": async_totals == seq_totals,
+            "sequential": {"wall_seconds": seq_wall,
+                           "jobs_per_batch": seq_serve.stats()["jobs_per_batch"],
+                           "batches": seq_serve.stats()["batches"]},
+            "async": {"wall_seconds": async_wall,
+                      "jobs_per_batch": ast["jobs_per_batch"],
+                      "batches": ast["batches"],
+                      "loop_errors": ast["loop_errors"]},
+        }
+        sa = out["serve_async"]
+        print(f"[pipeline] serve_async: {len(grid)} jobs × {n_clients} clients — "
+              f"async {sa['async']['jobs_per_batch']:.1f} jobs/batch in "
+              f"{async_wall:.1f}s vs sequential 1.0 in {seq_wall:.1f}s, "
+              f"totals_match={sa['totals_match']}", flush=True)
+
     # --- step_layout: ring vs roll simulator state layouts ---------------
     # Steady-state packed step throughput (timeit re-stream of a device-
     # staged pack) at ctx_len 64. Teacher-forced rows isolate the pure

@@ -163,6 +163,21 @@ def throughput():
         CSV_ROWS.append(("serve_zoo/cache_hits", 0.0, c["hits"]))
         CSV_ROWS.append(("serve_zoo/cache_misses", 0.0, c["misses"]))
         CSV_ROWS.append(("serve_zoo/compile_seconds", 0.0, c["compile_seconds"]))
+    sa = data.get("serve_async")
+    if sa:
+        seq_s, asy = sa["sequential"], sa["async"]
+        print(f"  SimServe async drain loop: {sa['n_jobs']} jobs from "
+              f"{sa['n_clients']} client threads over {len(sa['models'])} models")
+        print(f"    sequential one-batch-per-job: {seq_s['batches']} batches "
+              f"in {seq_s['wall_seconds']:.1f}s")
+        print(f"    background loop:              {asy['batches']} batches "
+              f"({asy['jobs_per_batch']:.1f} jobs/batch) in "
+              f"{asy['wall_seconds']:.1f}s — totals "
+              f"{'bit-identical' if sa['totals_match'] else 'MISMATCH'}")
+        CSV_ROWS.append(("serve_async/seq_wall_s", 0.0, seq_s["wall_seconds"]))
+        CSV_ROWS.append(("serve_async/async_wall_s", 0.0, asy["wall_seconds"]))
+        CSV_ROWS.append(("serve_async/jobs_per_batch", 0.0, asy["jobs_per_batch"]))
+        CSV_ROWS.append(("serve_async/totals_match", 0.0, float(sa["totals_match"])))
     lay = data.get("step_layout")
     if lay:
         print(f"  step layouts (ring vs roll state traffic, ctx_len "

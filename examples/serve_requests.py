@@ -3,9 +3,11 @@ one compile.
 
 A stream of requests — different benchmarks, different lane counts,
 different clients, some against the trained predictor and some
-teacher-forced — lands on ONE resident service. The scheduler
-continuously packs compatible pending jobs into shared lane batches per
-resident model (lane counts bucket to powers of two, dead lanes are
+teacher-forced — lands on ONE resident service running its background
+drain loop. Each client is a real thread: it submits, then blocks on its
+own handles (`result(timeout=...)`) while the scheduler packs compatible
+pending jobs into shared lane batches per resident model (round-robin
+across models, lane counts bucketed to powers of two, dead lanes
 masked), and the compile cache keys executables by architecture, never
 weights, so the whole mix runs on a couple of compiled programs.
 
@@ -14,8 +16,9 @@ weights, so the whole mix runs on a couple of compiled programs.
 
 CLI equivalent (batch mode, JSON in/out):
 
-  python -m repro serve --jobs jobs.json
+  python -m repro serve --jobs jobs.json --async --max-queue-depth 256
 """
+import threading
 import time
 
 from examples.simulate_workload import get_session
@@ -34,29 +37,36 @@ REQUESTS = [  # (client, benchmark, n_instructions, lanes, use_predictor)
 
 def main():
     sn = get_session()  # trained artifact (train-once / serve-everyone)
-    serve = SimServe()
+    serve = SimServe(max_queue_depth=256, max_wait_ms=10.0)
     serve.register("c3", sn.artifact)
 
     traces = {name: api.generate_traces([name], n, cache_dir="artifacts/traces")[0]
               for _, name, n, _, _ in REQUESTS}
 
-    print(f"== submitting {len(REQUESTS)} requests from "
-          f"{len({c for c, *_ in REQUESTS})} clients ==")
-    handles = []
-    for client, bench, n, lanes, pred in REQUESTS:
+    print(f"== {len(REQUESTS)} client threads against the background drain loop ==")
+    done = []
+    dlock = threading.Lock()
+
+    def client(who, bench, n, lanes, pred):
         h = serve.submit(traces[bench], "c3" if pred else None,
-                         n_lanes=lanes, name=f"{client}/{bench}")
-        handles.append(h)
+                         n_lanes=lanes, name=f"{who}/{bench}")
+        w = h.result(timeout=600)  # blocks on THIS job only — never drains
+        with dlock:
+            done.append((w, h.model_id))
 
     t0 = time.time()
-    serve.drain()
+    with serve:  # starts the drain loop; stop (and final drain) on exit
+        threads = [threading.Thread(target=client, args=req) for req in REQUESTS]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
     wall = time.time() - t0
 
-    print(f"== drained in {wall:.2f}s ==")
-    for h in handles:
-        w = h.result()
+    print(f"== all clients served in {wall:.2f}s ==")
+    for w, mid in sorted(done, key=lambda x: x[0].name):
         err = f", CPI err vs DES {100*w.cpi_error:.1f}%" if w.cpi_error is not None else ""
-        print(f"  {w.name:24s} model={h.model_id:14s} "
+        print(f"  {w.name:24s} model={mid:14s} "
               f"{w.total_cycles:9.0f} cycles, CPI {w.cpi:.3f}{err}")
 
     st = serve.stats()

@@ -12,7 +12,9 @@ compose with jq / CI checks.
             the same engine path (fast structural dry-run, used by CI)
   serve     batch-mode SimServe: read a JSON job file (many jobs × many
             resident models), continuously pack the jobs into shared lane
-            batches per model, emit per-job results + service/cache stats
+            batches per model, emit per-job results + service/cache stats;
+            --async runs the background drain loop (--max-wait-ms batch
+            window, --max-queue-depth admission control)
   bench     packed-vs-sequential engine microbenchmark
 
 Train once, simulate anywhere:
@@ -29,6 +31,8 @@ Serve a job file (jobs without "model" replay teacher-forced; all jobs
 against one resident model share lane batches and compiled executables):
 
   python -m repro serve --jobs jobs.json
+  python -m repro serve --jobs jobs.json --async --max-queue-depth 256 \
+      --max-wait-ms 5          # background drain loop + admission control
   # jobs.json:
   # {"models": {"c3": "artifacts/models/cli_c3"},
   #  "jobs": [{"id": "a", "model": "c3", "bench": "sim_loop", "n": 4000},
@@ -48,7 +52,7 @@ from repro.core.predictor import PredictorConfig
 from repro.core.session import SimNet
 from repro.core.simulator import SimConfig
 from repro.des.o3 import A64FX_CONFIG, O3Config
-from repro.serving.service import SimServe
+from repro.serving.service import QueueFull, SimServe
 
 O3_CONFIGS = {"default": None, "a64fx": A64FX_CONFIG}
 
@@ -165,12 +169,23 @@ def cmd_sweep(args) -> int:
 
 def cmd_serve(args) -> int:
     """Batch-mode service: load the job file's models once as residents,
-    submit every job, drain (continuous batching per resident model), and
-    emit per-job results plus batch/cache statistics."""
+    submit every job, run the queue (continuous batching per resident
+    model), and emit per-job results plus batch/cache statistics.
+
+    With ``--async`` the background drain loop dispatches while jobs are
+    still being submitted (``--max-wait-ms`` batch window, round-robin
+    across resident models) and ``--max-queue-depth`` bounds admission;
+    without it the queue drains synchronously after the last submit."""
     spec = json.loads(Path(args.jobs).read_text())
-    serve = SimServe(chunk=args.chunk)
+    serve = SimServe(
+        chunk=args.chunk,
+        max_queue_depth=args.max_queue_depth,
+        max_wait_ms=args.max_wait_ms,
+    )
     for mid, path in (spec.get("models") or {}).items():
         serve.register(mid, path)
+    if args.async_:
+        serve.start()
     handles = []
     trace_memo = {}  # jobs repeating a (bench, n, o3) cell share one DES run
     for i, job in enumerate(spec.get("jobs", [])):
@@ -180,14 +195,31 @@ def cmd_serve(args) -> int:
         if tkey not in trace_memo:
             trace_memo[tkey] = _gen_traces([tkey[0]], n, tkey[2], args.cache_dir)[0]
         tr = trace_memo[tkey]
-        h = serve.submit(
-            tr, job.get("model"),
-            n_lanes=int(job.get("lanes", args.lanes)),
-            name=job.get("id") or f"job{i}",
-        )
+        while True:
+            try:
+                h = serve.submit(
+                    tr, job.get("model"),
+                    n_lanes=int(job.get("lanes", args.lanes)),
+                    name=job.get("id") or f"job{i}",
+                )
+                break
+            except QueueFull:
+                # the documented client response to backpressure: let the
+                # queue shrink, then retry (async: the loop is draining;
+                # sync: drain here — nothing else will)
+                if args.async_:
+                    time.sleep(0.01)
+                else:
+                    serve.drain()
         handles.append((job.get("id") or f"job{i}", job.get("model"), h))
-    serve.drain()
+    if args.async_:
+        for _, _, h in handles:
+            h.wait()
+        serve.stop()  # joins the loop; drains any straggler inline
+    else:
+        serve.drain()
     _emit({
+        "mode": "async" if args.async_ else "sync",
         "jobs": [
             {"id": jid, "model": mid, "result": h.result().to_dict()}
             for jid, mid, h in handles
@@ -312,6 +344,17 @@ def build_parser() -> argparse.ArgumentParser:
                         '"jobs": [{"id", "model", "bench", "n", "lanes", "o3"}]}')
     p.add_argument("--chunk", type=int, default=1024,
                    help="streaming chunk cap (bucketed per batch)")
+    p.add_argument("--async", dest="async_", action="store_true",
+                   help="run the background drain loop: batches dispatch "
+                        "while jobs are still being submitted, round-robin "
+                        "across resident models")
+    p.add_argument("--max-queue-depth", type=int, default=0,
+                   help="admission control: refuse submits (QueueFull) past "
+                        "this many pending jobs (0 = unbounded)")
+    p.add_argument("--max-wait-ms", type=float, default=5.0,
+                   help="async batch window: after the first pending job, "
+                        "wait this long for batchmates before dispatching "
+                        "(latency traded for pack density)")
     p.set_defaults(fn=cmd_serve)
 
     p = sub.add_parser("bench", help="packed vs sequential throughput microbench")

@@ -170,7 +170,10 @@ class SimNet:
     one-resident-model service by default; pass ``service=`` to join a
     shared one) and run as packed lane batches; ``mesh`` shards the lane
     axis, ``chunk`` bounds device memory for long traces, ``cache``
-    overrides the process-wide executable cache.
+    overrides the process-wide executable cache. ``background=True``
+    starts the service's drain loop so simulate calls wait on their job
+    handles instead of draining on the caller's thread (sessions are
+    context managers: ``with SimNet(background=True) as sn: ...``).
     """
 
     _session_ids = itertools.count()
@@ -189,6 +192,7 @@ class SimNet:
         service: Optional[SimServe] = None,
         model_id: Optional[str] = None,
         cache=None,
+        background: bool = False,
     ):
         self._metadata: Dict[str, Any] = {}
         if artifact is not None:
@@ -212,11 +216,17 @@ class SimNet:
         )
         # the session's predictor becomes a resident model in a service —
         # a private single-model SimServe unless the caller shares one
+        self._owns_service = service is None
         self.service = service or SimServe(chunk=chunk, cache=self.engine.cache)
         kind = pcfg.kind if pcfg is not None else "teacher-forced"
         self.model_id = self.service.register_engine(
             model_id or f"session{next(self._session_ids)}-{kind}", self.engine
         )
+        if background:
+            # the session rides the service's background drain loop:
+            # simulate* submits and waits on handles, never draining on
+            # the caller's thread (start() is idempotent on a shared one)
+            self.service.start()
 
     def __repr__(self):
         head = self.pcfg.kind if self.pcfg is not None else "teacher-forced"
@@ -224,8 +234,18 @@ class SimNet:
 
     def close(self):
         """Evict this session's resident model from its service registry
-        (matters when many short-lived sessions join a shared service)."""
+        (matters when many short-lived sessions join a shared service);
+        a private background drain loop is stopped too."""
+        if self._owns_service and self.service.running:
+            self.service.stop()
         self.service.registry.remove(self.model_id)
+
+    def __enter__(self) -> "SimNet":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
 
     # ------------------------------------------------------------ lifecycle
 
@@ -350,14 +370,18 @@ class SimNet:
                 self.service.cancel(h)
             raise
         try:
-            self.service.drain()
+            if not self.service.running:
+                # synchronous service: drain on this thread. With the
+                # background loop running the drain happens there and
+                # result() blocks on each job's completion event.
+                self.service.drain()
+            workloads = tuple(h.result() for h in handles)
         except Exception:
             # same invariant when a batch dies mid-drain: withdraw this
             # call's still-pending jobs (ran/errored ones are unaffected)
             for h in handles:
                 self.service.cancel(h)
             raise
-        workloads = tuple(h.result() for h in handles)
         reports, seen = [], set()
         for h in handles:
             if id(h.batch) not in seen:

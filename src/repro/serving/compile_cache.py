@@ -25,9 +25,18 @@ Two mechanisms fix that:
 Entries are AOT-compiled (`jit → lower → compile`) at miss time, so
 ``stats()`` reports true compile seconds separated from run time:
 hits / misses / compile_seconds / per-key breakdown.
+
+Compiles run OUTSIDE the global lock, coordinated by per-key in-flight
+futures: two batches needing *different* shapes compile in parallel (and
+hit-path lookups for resident keys never block behind a multi-second AOT
+compile), while two needing the *same* shape still compile exactly once —
+the second caller waits on the first's future. A ``builder()`` that
+raises is never counted as a compile and never poisons the key: its
+waiters see the error, and the next ``get`` retries the build.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import threading
 import time
@@ -99,6 +108,8 @@ class CompileCache:
     def __init__(self):
         self._entries: Dict[ExecutableKey, Callable] = {}
         self._lock = threading.Lock()
+        self._inflight: Dict[ExecutableKey, concurrent.futures.Future] = {}
+        self._generation = 0  # bumped by clear(); stale builds don't land
         self._hits = 0
         self._misses = 0
         self._compile_seconds = 0.0
@@ -111,19 +122,48 @@ class CompileCache:
                 self._hits += 1
                 self._per_key[key]["hits"] += 1
                 return exe
-            # compile under the lock: concurrent callers of the same key
-            # would otherwise both pay (and race) the compile
-            t0 = time.time()
-            exe = builder()
-            dt = time.time() - t0
-            self._entries[key] = exe
-            self._misses += 1
-            self._compile_seconds += dt
-            self._per_key[key] = {"hits": 0, "compile_seconds": dt}
+            fut = self._inflight.get(key)
+            owner = fut is None
+            if owner:
+                # we build; concurrent same-key callers wait on the future
+                # (one compile per key) while other keys — and hit-path
+                # lookups — proceed: the lock is never held across a build
+                fut = concurrent.futures.Future()
+                self._inflight[key] = fut
+                gen = self._generation
+        if not owner:
+            exe = fut.result()  # the owner's compile is our reuse
+            with self._lock:
+                self._hits += 1
+                if key in self._per_key:
+                    self._per_key[key]["hits"] += 1
             return exe
+        t0 = time.time()
+        try:
+            exe = builder()
+        except BaseException as e:
+            # a failed build must not count as a compile or wedge the key:
+            # waiters see the error, the next get() retries the build
+            with self._lock:
+                self._inflight.pop(key, None)
+            fut.set_exception(e)
+            raise
+        dt = time.time() - t0
+        with self._lock:
+            if self._generation == gen:
+                self._entries[key] = exe
+                self._misses += 1
+                self._compile_seconds += dt
+                self._per_key[key] = {"hits": 0, "compile_seconds": dt}
+            # else: clear() ran mid-build — hand the executable to our
+            # waiters but keep it (and its counters) out of the wiped cache
+            self._inflight.pop(key, None)
+        fut.set_result(exe)
+        return exe
 
     def clear(self) -> None:
         with self._lock:
+            self._generation += 1  # builds in flight must not repopulate us
             self._entries.clear()
             self._per_key.clear()
             self._hits = self._misses = 0

@@ -11,9 +11,15 @@ compiled executables.
 The special id ``TEACHER_FORCED`` is the resident label-replay "model"
 (no weights): requests without a model id replay their DES labels through
 the identical engine path.
+
+A registry serves many client threads at once (the async `SimServe` path
+submits and drains concurrently), so every check-then-act sequence holds
+the registry lock: two racing ``ensure_teacher_forced`` calls resolve to
+ONE resident engine instead of the loser dying on "already registered".
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, Iterable, Optional
 
 from repro.checkpoint.artifact import PredictorArtifact
@@ -28,13 +34,17 @@ TEACHER_FORCED = "teacher-forced"
 class ModelRegistry:
     """Resident engines by model id. Construction-time ``mesh`` /
     ``use_kernel`` / ``cache`` apply to every engine the registry builds
-    (an externally built engine can be adopted via `add_engine`)."""
+    (an externally built engine can be adopted via `add_engine`).
+    Thread-safe: admission, lookup and eviction serialize on one
+    re-entrant lock (engine *construction* is cheap — compiles happen
+    lazily at first dispatch, outside the registry)."""
 
     def __init__(self, *, mesh=None, use_kernel: bool = False,
                  cache: Optional[CompileCache] = None):
         self.mesh = mesh
         self.use_kernel = use_kernel
         self.cache = cache
+        self._lock = threading.RLock()  # add() nests into add_engine()
         self._engines: Dict[str, SimNetEngine] = {}
 
     # ------------------------------------------------------------- admission
@@ -42,9 +52,10 @@ class ModelRegistry:
     def add_engine(self, model_id: str, engine: SimNetEngine) -> str:
         """Adopt an already-built engine (e.g. a SimNet session's) as a
         resident model."""
-        if model_id in self._engines and self._engines[model_id] is not engine:
-            raise ValueError(f"model id {model_id!r} is already registered")
-        self._engines[model_id] = engine
+        with self._lock:
+            if model_id in self._engines and self._engines[model_id] is not engine:
+                raise ValueError(f"model id {model_id!r} is already registered")
+            self._engines[model_id] = engine
         return model_id
 
     def add(
@@ -71,30 +82,40 @@ class ModelRegistry:
         )
 
     def ensure_teacher_forced(self, sim_cfg: Optional[SimConfig] = None) -> str:
-        if TEACHER_FORCED not in self._engines:
-            self.add(TEACHER_FORCED, sim_cfg=sim_cfg)
+        # atomic check-then-add: two concurrent submits (model_id=None)
+        # must resolve to one resident entry, not race each other into a
+        # spurious "already registered" for the loser
+        with self._lock:
+            if TEACHER_FORCED not in self._engines:
+                self.add(TEACHER_FORCED, sim_cfg=sim_cfg)
         return TEACHER_FORCED
 
     def remove(self, model_id: str) -> None:
         """Evict a resident model (frees its engine; a shared service
         hosting short-lived sessions should evict their entries)."""
-        self._engines.pop(model_id, None)
+        with self._lock:
+            self._engines.pop(model_id, None)
 
     # --------------------------------------------------------------- lookup
 
     def get(self, model_id: str) -> SimNetEngine:
-        try:
-            return self._engines[model_id]
-        except KeyError:
-            raise KeyError(
-                f"no resident model {model_id!r}; registered: {sorted(self._engines)}"
-            ) from None
+        with self._lock:
+            try:
+                return self._engines[model_id]
+            except KeyError:
+                raise KeyError(
+                    f"no resident model {model_id!r}; "
+                    f"registered: {sorted(self._engines)}"
+                ) from None
 
     def __contains__(self, model_id: str) -> bool:
-        return model_id in self._engines
+        with self._lock:
+            return model_id in self._engines
 
     def __len__(self) -> int:
-        return len(self._engines)
+        with self._lock:
+            return len(self._engines)
 
     def ids(self) -> Iterable[str]:
-        return tuple(self._engines)
+        with self._lock:
+            return tuple(self._engines)

@@ -17,15 +17,30 @@ predictor, preserving per-workload results exactly.
     h1.result()                                      # WorkloadResult
     serve.stats()                                    # jobs/batches/cache hits
 
+Concurrent clients use the **background drain loop** instead of calling
+``drain()`` themselves: ``start()`` (or ``with SimServe(...) as serve:``)
+runs a scheduler thread that waits up to ``max_wait_ms`` after the first
+pending job for batchmates to accumulate, then dispatches — round-robin
+across resident models, so one chatty model cannot starve the rest — and
+``JobHandle.result(timeout=...)`` / ``.wait()`` block on the job's own
+completion event, never on a client-thread drain. ``max_queue_depth``
+bounds the queue: ``submit`` raises `QueueFull` instead of buffering
+without bound (backpressure the client can see and retry).
+
+    with SimServe(max_queue_depth=256, max_wait_ms=5.0) as serve:
+        serve.register("c3", "artifacts/models/c3")
+        handles = [serve.submit(t, "c3") for t in traces]   # any thread
+        totals = [h.result(timeout=60) for h in handles]    # never drains
+
 Single-session use is just a service with one client: `SimNet.simulate*`
-routes through a private `SimServe` around the session's own engine.
-Batch mode from the shell: ``python -m repro serve --jobs jobs.json``.
+routes through a private `SimServe` around the session's own engine
+(``SimNet(background=True)`` runs it on the drain loop). Batch mode from
+the shell: ``python -m repro serve --jobs jobs.json [--async]``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -39,6 +54,14 @@ from repro.serving.compile_cache import (
     lane_bucket,
 )
 from repro.serving.registry import ModelRegistry, TEACHER_FORCED
+
+
+class QueueFull(RuntimeError):
+    """``submit`` refused a job: the queue is at ``max_queue_depth``.
+
+    Backpressure, not data loss — nothing was enqueued. Clients should
+    retry after draining their outstanding handles (or run the service
+    with a deeper queue / more drain capacity)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,11 +101,19 @@ class _Job:
     batch: Optional[BatchReport] = None
     error: Optional[BaseException] = None
     cancelled: bool = False
+    # set exactly once, when the job reaches a terminal state (result
+    # pinned, error pinned, or cancelled) — what result()/wait() block on
+    done_evt: threading.Event = dataclasses.field(default_factory=threading.Event)
 
 
 class JobHandle:
-    """A submitted simulation request. ``result()`` drains the service if
-    the job has not run yet, then returns this workload's totals."""
+    """A submitted simulation request.
+
+    ``result()`` blocks on the job's completion event when the service's
+    background loop is running (or a ``timeout`` is given) — the client
+    thread never executes other clients' jobs. Without a running loop and
+    without a timeout it keeps the synchronous contract: drain inline,
+    then return this workload's totals."""
 
     def __init__(self, service: "SimServe", job: _Job):
         self._service = service
@@ -97,29 +128,49 @@ class JobHandle:
         return self._job.model_id
 
     def done(self) -> bool:
-        return self._job.result is not None
+        """True once the job reached a terminal state — completed, failed
+        (its batch error is recorded), or cancelled."""
+        return self._job.done_evt.is_set()
 
-    def result(self) -> WorkloadResult:
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the job is done (True) or ``timeout`` elapses
+        (False). Never drains — pair with a started service."""
+        return self._job.done_evt.wait(timeout)
+
+    def _raise_terminal(self) -> None:
         if self._job.cancelled:
             raise RuntimeError(f"job {self.job_id} was cancelled")
-        if not self.done():
-            self._service.drain()
         if self._job.error is not None:
+            # an already-failed job must re-raise its recorded batch error
+            # immediately — draining here would run *unrelated* queued
+            # jobs on this client's thread as a side effect
             raise RuntimeError(
                 f"job {self.job_id} failed in its batch"
             ) from self._job.error
+
+    def result(self, timeout: Optional[float] = None) -> WorkloadResult:
+        self._raise_terminal()
         if self._job.result is None:
-            # left the queue but not finished: another thread's drain holds
-            # it in an in-flight batch — never hand back a silent None
-            raise RuntimeError(
-                f"job {self.job_id} is in flight in another drain; "
-                "call result() again after it completes"
-            )
+            if self._service.running or timeout is not None:
+                if not self._job.done_evt.wait(timeout):
+                    raise TimeoutError(
+                        f"job {self.job_id} did not complete within "
+                        f"{timeout}s (service running="
+                        f"{self._service.running}, "
+                        f"pending={self._service.pending})"
+                    )
+            else:
+                self._service.drain()
+                if not self._job.done_evt.is_set():
+                    # another thread's drain holds it in an in-flight
+                    # batch — wait for that dispatch to pin the outcome
+                    self._job.done_evt.wait()
+        self._raise_terminal()
         return self._job.result
 
     @property
     def batch(self) -> BatchReport:
-        if not self.done():
+        if self._job.batch is None:
             raise RuntimeError(f"job {self.job_id} has not run (call drain())")
         return self._job.batch
 
@@ -131,13 +182,17 @@ class JobHandle:
 class SimServe:
     """Job-queue scheduler over resident predictors.
 
-    ``submit`` enqueues; ``drain`` repeatedly takes every compatible
-    pending job of one resident model — across requests — and runs them as
-    ONE packed engine dispatch (lane-bucketed, so the compiled executable
+    ``submit`` enqueues (bounded by ``max_queue_depth``); dispatch — via
+    an explicit ``drain()`` or the background loop — repeatedly takes
+    every compatible pending job of ONE resident model and runs them as
+    one packed engine dispatch (lane-bucketed, so the compiled executable
     is shared with every other batch of the same shape and architecture).
     Jobs are compatible when they share the model and the SimConfig fields
     the packed scan cannot replay per lane (everything except
-    ctx_len / retire_width, which pack per-lane).
+    ctx_len / retire_width, which pack per-lane). Models take turns
+    round-robin: with several residents backed up, consecutive batches
+    serve *different* models instead of emptying the head model's queue
+    first.
     """
 
     def __init__(
@@ -146,6 +201,8 @@ class SimServe:
         *,
         chunk: int = 1024,
         max_batch_lanes: int = 4096,
+        max_queue_depth: int = 0,
+        max_wait_ms: float = 5.0,
         mesh=None,
         use_kernel: bool = False,
         cache: Optional[CompileCache] = None,
@@ -156,18 +213,32 @@ class SimServe:
         )
         self.chunk = chunk
         self.max_batch_lanes = max_batch_lanes
-        self._ids = itertools.count()
-        self._qlock = threading.Lock()  # guards _pending (submit vs drain)
+        # 0 = unbounded; > 0: submit raises QueueFull past this many pending
+        self.max_queue_depth = int(max_queue_depth)
+        # batch window of the background loop: after the first pending job
+        # is seen, wait this long for batchmates before dispatching
+        # (latency traded for pack density; 0 dispatches immediately)
+        self.max_wait_ms = float(max_wait_ms)
+        self._qlock = threading.Lock()  # guards _pending + counters + _rr
         self._pending: List[_Job] = []
+        self._next_id = 0
+        self._last_model: Optional[str] = None  # round-robin cursor
         # recent dispatch history only — a resident service must not grow
         # per-batch state without bound; aggregates live in the counters
         self._batches: collections.deque = collections.deque(maxlen=256)
         self._n_batches = 0
         self._jobs_submitted = 0
         self._jobs_completed = 0
+        self._jobs_rejected = 0  # QueueFull refusals (admission honesty)
         self._lanes_live = 0
         self._lanes_dispatched = 0
         self._dead_lane_steps = 0  # bucketing overhead, for stats honesty
+        # background drain loop
+        self._lifecycle = threading.Lock()  # start/stop vs start/stop only
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self._wake = threading.Event()
+        self._loop_errors = 0  # batch failures the loop absorbed
 
     # ----------------------------------------------------------- admission
 
@@ -190,6 +261,83 @@ class SimServe:
     def register_engine(self, model_id: str, engine) -> str:
         return self.registry.add_engine(model_id, engine)
 
+    # ----------------------------------------------------------- lifecycle
+
+    @property
+    def running(self) -> bool:
+        """True while the background drain loop is serving the queue."""
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def start(self) -> "SimServe":
+        """Run the drain loop on a background thread. Idempotent; returns
+        self so ``with SimServe(...).start():`` and chained construction
+        read naturally."""
+        with self._lifecycle:
+            if self.running:
+                return self
+            self._stop_evt = threading.Event()
+            self._wake = threading.Event()
+            self._thread = threading.Thread(
+                target=self._drain_loop, name="simserve-drain", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop the background loop (joins the thread). ``drain=True``
+        (default) then runs any still-pending jobs inline so no accepted
+        job is abandoned; their handles complete or carry errors.
+
+        With a ``timeout`` the join may expire while the loop is still
+        finishing its current batch: the thread then stays tracked
+        (``running`` remains True, no inline drain races it) and a later
+        ``stop()`` completes the shutdown."""
+        with self._lifecycle:
+            t = self._thread
+            if t is not None:
+                self._stop_evt.set()
+                self._wake.set()
+                t.join(timeout)
+                if t.is_alive():
+                    return  # mid-batch; try again — never drain concurrently
+                self._thread = None
+        if drain:
+            self.drain()
+
+    def __enter__(self) -> "SimServe":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        return False
+
+    def _drain_loop(self) -> None:
+        """The scheduler thread: sleep until work shows up, give
+        batchmates ``max_wait_ms`` to accumulate, dispatch everything,
+        repeat. A failed batch pins its error on its own jobs (their
+        handles re-raise it); the loop keeps serving everyone else."""
+        while not self._stop_evt.is_set():
+            self._wake.wait(0.05)  # submit() wakes us early; 50 ms fallback
+            self._wake.clear()
+            if self._stop_evt.is_set():
+                return
+            with self._qlock:
+                has_work = bool(self._pending)
+            if not has_work:
+                continue
+            if self.max_wait_ms > 0:
+                self._stop_evt.wait(self.max_wait_ms / 1000.0)
+            try:
+                self.drain()
+            except BaseException:
+                # already pinned on the failed batch's handles by drain().
+                # BaseException: the scheduler must outlive even a stray
+                # KeyboardInterrupt/SystemExit raised into this thread —
+                # dying silently would strand every blocked result() call
+                with self._qlock:
+                    self._loop_errors += 1
+
     # ------------------------------------------------------------ the queue
 
     def submit(
@@ -205,7 +353,9 @@ class SimServe:
     ) -> JobHandle:
         """Enqueue one workload against a resident model (None = the
         teacher-forced resident). Returns immediately; the job runs at the
-        next ``drain()`` packed together with every compatible request."""
+        next dispatch packed together with every compatible request.
+        Raises `QueueFull` when ``max_queue_depth`` pending jobs are
+        already buffered — nothing is enqueued in that case."""
         if model_id is None:
             model_id = self.registry.ensure_teacher_forced()
         elif model_id not in self.registry:
@@ -254,31 +404,46 @@ class SimServe:
                 f"n_lanes={n_lanes} invalid for a {T}-instruction workload "
                 "(need 1 <= n_lanes <= instructions)"
             )
-        job = _Job(
-            job_id=next(self._ids),
-            model_id=model_id,
-            trace=trace,
-            arrs=arrs,
-            name=name or getattr(trace, "name", None) or f"job{self._jobs_submitted}",
-            n_lanes=int(n_lanes),
-            sim_cfg=sim_cfg,
-            timeit=timeit,
-            chunk=chunk,
-        )
         with self._qlock:
+            if self.max_queue_depth and len(self._pending) >= self.max_queue_depth:
+                self._jobs_rejected += 1
+                raise QueueFull(
+                    f"queue is full ({len(self._pending)} pending >= "
+                    f"max_queue_depth={self.max_queue_depth}); job refused — "
+                    "wait on outstanding handles and retry"
+                )
+            job_id = self._next_id
+            self._next_id += 1
+            job = _Job(
+                job_id=job_id,
+                model_id=model_id,
+                trace=trace,
+                arrs=arrs,
+                # the default name derives from the already-unique job_id,
+                # minted under the lock — a shared counter read outside it
+                # minted colliding names under concurrent submits
+                name=name or getattr(trace, "name", None) or f"job{job_id}",
+                n_lanes=int(n_lanes),
+                sim_cfg=sim_cfg,
+                timeit=timeit,
+                chunk=chunk,
+            )
             self._pending.append(job)
             self._jobs_submitted += 1
+        self._wake.set()  # the background loop opens its batch window now
         return JobHandle(self, job)
 
     def cancel(self, handle: JobHandle) -> bool:
         """Withdraw a still-pending job from the queue (False if it already
-        ran or left the queue). Lets a client unwind a multi-submit that
-        failed halfway instead of leaving orphans for the next batch."""
+        ran or left the queue — an in-flight batch cannot be recalled).
+        Lets a client unwind a multi-submit that failed halfway instead of
+        leaving orphans for the next batch."""
         with self._qlock:
             for i, job in enumerate(self._pending):
                 if job is handle._job:
                     del self._pending[i]
                     job.cancelled = True  # result() raises, never None
+                    job.done_evt.set()
                     return True
         return False
 
@@ -288,10 +453,53 @@ class SimServe:
         already guaranteed by submit() to match the resident engine's.)"""
         return (job.model_id, job.timeit)
 
+    def _take_batch(self) -> Tuple[Optional[Tuple], List[_Job]]:
+        """Atomically pop the next batch: pick the group whose model is the
+        round-robin successor of the last-served one (per-model fairness —
+        a model with a deep backlog cannot starve the others), then pack
+        its pending jobs FIFO up to ``max_batch_lanes`` live lanes."""
+        with self._qlock:
+            if not self._pending:
+                return None, []
+            keys: List[Tuple] = []
+            for job in self._pending:
+                k = self._group_key(job)
+                if k not in keys:
+                    keys.append(k)
+            key = self._next_group(keys)
+            batch: List[_Job] = []
+            lanes = 0
+            rest: List[_Job] = []
+            for job in self._pending:
+                # the first job of the group always rides (a single job
+                # wider than the cap gets its own batch — it must not
+                # wedge the queue)
+                if self._group_key(job) == key and (
+                    not batch or lanes + job.n_lanes <= self.max_batch_lanes
+                ):
+                    batch.append(job)
+                    lanes += job.n_lanes
+                else:
+                    rest.append(job)
+            self._pending = rest
+            self._last_model = key[0]
+            return key, batch
+
+    def _next_group(self, keys: Sequence[Tuple]) -> Tuple:
+        """Round-robin across models: the waiting group whose model id is
+        the cyclic successor of the last-served one (queue order breaks
+        ties between groups of the same model)."""
+        if self._last_model is None:
+            return keys[0]
+        models = sorted({k[0] for k in keys})
+        nxt = next((m for m in models if m > self._last_model), models[0])
+        return next(k for k in keys if k[0] == nxt)
+
     def drain(self) -> List[BatchReport]:
-        """Run every pending job. Each iteration packs the head-of-queue
-        job with all compatible pending jobs (FIFO, capped at
-        ``max_batch_lanes`` live lanes) into one engine dispatch.
+        """Run every pending job on the calling thread. Each iteration
+        packs one model's compatible pending jobs (round-robin across
+        models, FIFO within one, capped at ``max_batch_lanes`` live lanes)
+        into one engine dispatch.
 
         Returns the reports of the batches THIS call ran. If a batch
         fails mid-drain the error propagates; batches completed before it
@@ -300,32 +508,20 @@ class SimServe:
         queue drains on the next call."""
         reports: List[BatchReport] = []
         while True:
-            with self._qlock:  # batch selection is atomic vs racing submits
-                if not self._pending:
-                    break
-                key = self._group_key(self._pending[0])
-                batch: List[_Job] = []
-                lanes = 0
-                rest: List[_Job] = []
-                for job in self._pending:
-                    # the head job always rides (a single job wider than the
-                    # cap gets its own batch — it must not wedge the queue)
-                    if self._group_key(job) == key and (
-                        not batch or lanes + job.n_lanes <= self.max_batch_lanes
-                    ):
-                        batch.append(job)
-                        lanes += job.n_lanes
-                    else:
-                        rest.append(job)
-                self._pending = rest
+            key, batch = self._take_batch()
+            if key is None:
+                break
             try:
                 reports.append(self._run_batch(key[0], batch))
-            except Exception as e:
+            except BaseException as e:
                 # the batch's jobs already left the queue — pin the error on
                 # each so result() raises instead of returning None, then
-                # surface it (the remaining queue drains on the next call)
+                # surface it (the remaining queue drains on the next call).
+                # BaseException on purpose: a KeyboardInterrupt mid-compile
+                # must not leave waiters blocked on unpinned jobs forever
                 for job in batch:
                     job.error = e
+                    job.done_evt.set()
                 raise
         return reports
 
@@ -356,6 +552,7 @@ class SimServe:
         for i, job in enumerate(jobs):
             job.result = self._workload_result(job, res, i)
             job.batch = report
+            job.done_evt.set()  # result is pinned — waiters may wake now
         with self._qlock:  # concurrent drains must not lose counter updates
             self._jobs_completed += len(jobs)
             self._lanes_live += report.n_live_lanes
@@ -407,6 +604,7 @@ class SimServe:
         return {
             "jobs_submitted": self._jobs_submitted,
             "jobs_completed": self._jobs_completed,
+            "jobs_rejected": self._jobs_rejected,
             "jobs_pending": len(self._pending),
             "batches": self._n_batches,
             "models_resident": sorted(self.registry.ids()),
@@ -416,5 +614,9 @@ class SimServe:
             "jobs_per_batch": (
                 self._jobs_completed / self._n_batches if self._n_batches else 0.0
             ),
+            "running": self.running,
+            "loop_errors": self._loop_errors,
+            "max_queue_depth": self.max_queue_depth,
+            "max_wait_ms": self.max_wait_ms,
             "cache": self.cache.stats(),
         }
