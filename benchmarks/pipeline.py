@@ -448,6 +448,70 @@ def step_throughput(data, quick):
               f"{async_wall:.1f}s vs sequential 1.0 in {seq_wall:.1f}s, "
               f"totals_match={sa['totals_match']}", flush=True)
 
+        # --- serve_http: the same grid over the wire ---------------------
+        # N real HTTP client threads POST raw trace arrays to a live
+        # ephemeral-port front-end and poll /v1/jobs/<id> — totals must
+        # stay bit-identical to the in-process sequential baseline
+        # (float32/int32 arrays survive the JSON float64 round trip
+        # exactly) with batches still shared across clients. On the warm
+        # serve_cache this measures wire + scheduling overhead only.
+        from repro.core import features as FeatHTTP
+        from repro.serving.http import SimServeHTTP, http_request, wait_job
+
+        wire = {
+            tr.name: {k: np.asarray(v).tolist()
+                      for k, v in FeatHTTP.trace_arrays(tr).items()}
+            for _, tr in grid[:len(serve_traces)]
+        }
+        http_serve = SimServe(cache=serve_cache, max_wait_ms=10.0)
+        for mid in async_models:
+            http_serve.register(mid, str(ART / "models" / mid))
+        http_totals = {}
+
+        def http_client(c, base):
+            posted = [
+                (mid, tr.name,
+                 http_request(f"{base}/v1/jobs", "POST",
+                              {"trace": wire[tr.name], "model": mid,
+                               "lanes": lanes, "id": tr.name}))
+                for mid, tr in grid[c::n_clients]
+            ]
+            for mid, name, (st_, body) in posted:
+                assert st_ == 202, (st_, body)
+                done = wait_job(base, body["job_id"], timeout=600)
+                assert done["status"] == "done", done
+                http_totals[(mid, name)] = done["result"]["total_cycles"]
+
+        t0 = time.time()
+        with SimServeHTTP(http_serve) as front:
+            clients = [threading.Thread(target=http_client,
+                                        args=(c, front.url))
+                       for c in range(n_clients)]
+            for t in clients:
+                t.start()
+            for t in clients:
+                t.join()
+            _, hst = http_request(f"{front.url}/v1/stats")
+        http_serve.stop()
+        http_wall = time.time() - t0
+        out["serve_http"] = {
+            "models": async_models,
+            "n_clients": n_clients,
+            "n_jobs": len(grid),
+            "totals_match": http_totals == seq_totals,
+            "wall_seconds": http_wall,
+            "jobs_per_batch": hst["jobs_per_batch"],
+            "batches": hst["batches"],
+            "loop_errors": hst["loop_errors"],
+            "service_ms_p99": hst["telemetry"]["service_ms"]["p99"],
+            "queue_wait_ms_p99": hst["telemetry"]["queue_wait_ms"]["p99"],
+        }
+        sh = out["serve_http"]
+        print(f"[pipeline] serve_http: {len(grid)} jobs × {n_clients} HTTP "
+              f"clients — {sh['jobs_per_batch']:.1f} jobs/batch in "
+              f"{http_wall:.1f}s, p99 service {sh['service_ms_p99']:.0f} ms, "
+              f"totals_match={sh['totals_match']}", flush=True)
+
     # --- step_layout: ring vs roll simulator state layouts ---------------
     # Steady-state packed step throughput (timeit re-stream of a device-
     # staged pack) at ctx_len 64. Teacher-forced rows isolate the pure

@@ -178,6 +178,19 @@ def throughput():
         CSV_ROWS.append(("serve_async/async_wall_s", 0.0, asy["wall_seconds"]))
         CSV_ROWS.append(("serve_async/jobs_per_batch", 0.0, asy["jobs_per_batch"]))
         CSV_ROWS.append(("serve_async/totals_match", 0.0, float(sa["totals_match"])))
+    sh = data.get("serve_http")
+    if sh:
+        print(f"  SimServe over HTTP: {sh['n_jobs']} jobs from "
+              f"{sh['n_clients']} wire clients over {len(sh['models'])} models")
+        print(f"    {sh['batches']} batches ({sh['jobs_per_batch']:.1f} "
+              f"jobs/batch) in {sh['wall_seconds']:.1f}s — p99 service "
+              f"{sh['service_ms_p99']:.0f} ms, p99 queue wait "
+              f"{sh['queue_wait_ms_p99']:.0f} ms, totals "
+              f"{'bit-identical' if sh['totals_match'] else 'MISMATCH'}")
+        CSV_ROWS.append(("serve_http/wall_s", 0.0, sh["wall_seconds"]))
+        CSV_ROWS.append(("serve_http/jobs_per_batch", 0.0, sh["jobs_per_batch"]))
+        CSV_ROWS.append(("serve_http/service_ms_p99", 0.0, sh["service_ms_p99"]))
+        CSV_ROWS.append(("serve_http/totals_match", 0.0, float(sh["totals_match"])))
     lay = data.get("step_layout")
     if lay:
         print(f"  step layouts (ring vs roll state traffic, ctx_len "

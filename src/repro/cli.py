@@ -175,7 +175,14 @@ def cmd_serve(args) -> int:
     With ``--async`` the background drain loop dispatches while jobs are
     still being submitted (``--max-wait-ms`` batch window, round-robin
     across resident models) and ``--max-queue-depth`` bounds admission;
-    without it the queue drains synchronously after the last submit."""
+    without it the queue drains synchronously after the last submit.
+
+    With ``--http PORT`` (0 = ephemeral) the jobs round-trip over a live
+    HTTP front-end instead: the server binds, each job is POSTed to
+    ``/v1/jobs`` as a real network client, results are polled from
+    ``/v1/jobs/<id>`` and stats from ``/v1/stats`` — the CI smoke for
+    the wire path. ``--priority`` / ``--deadline-ms`` set per-job QoS
+    defaults (a job file entry's own "priority"/"deadline_ms" wins)."""
     spec = json.loads(Path(args.jobs).read_text())
     serve = SimServe(
         chunk=args.chunk,
@@ -184,6 +191,8 @@ def cmd_serve(args) -> int:
     )
     for mid, path in (spec.get("models") or {}).items():
         serve.register(mid, path)
+    if args.http is not None:
+        return _serve_http(args, spec, serve)
     if args.async_:
         serve.start()
     handles = []
@@ -201,6 +210,8 @@ def cmd_serve(args) -> int:
                     tr, job.get("model"),
                     n_lanes=int(job.get("lanes", args.lanes)),
                     name=job.get("id") or f"job{i}",
+                    priority=int(job.get("priority", args.priority)),
+                    deadline_ms=job.get("deadline_ms", args.deadline_ms),
                 )
                 break
             except QueueFull:
@@ -228,6 +239,65 @@ def cmd_serve(args) -> int:
         "stats": serve.stats(),
     })
     return 0
+
+
+def _serve_http(args, spec, serve: SimServe) -> int:
+    """The ``--http`` round trip: bind the front-end, act as a real HTTP
+    client against it (POST every job, poll every result), emit JSON."""
+    from repro.serving.http import SimServeHTTP, http_request, wait_job
+
+    front = SimServeHTTP(serve, port=args.http, cache_dir=args.cache_dir)
+    port = front.start()
+    base = front.url
+    try:
+        posted = []
+        for i, job in enumerate(spec.get("jobs", [])):
+            payload = {
+                "id": job.get("id") or f"job{i}",
+                "model": job.get("model"),
+                "bench": job.get("bench") or (args.bench[0] if args.bench
+                                              else "sim_loop"),
+                "n": int(job.get("n", args.n)),
+                "o3": job.get("o3", args.o3),
+                "lanes": int(job.get("lanes", args.lanes)),
+                "priority": int(job.get("priority", args.priority)),
+            }
+            deadline = job.get("deadline_ms", args.deadline_ms)
+            if deadline is not None:
+                payload["deadline_ms"] = float(deadline)
+            while True:
+                status, body = http_request(f"{base}/v1/jobs", "POST", payload)
+                if status != 429:  # queue-full backpressure: wait and retry
+                    break
+                time.sleep(0.02)
+            if status != 202:
+                print(f"submit {payload['id']!r} failed: {status} {body}",
+                      file=sys.stderr)
+                return 1
+            posted.append((payload["id"], job.get("model"), body["job_id"]))
+        jobs_out = []
+        failed = 0
+        for jid, mid, job_id in posted:
+            body = wait_job(base, job_id)
+            entry = {"id": jid, "model": mid, "status": body["status"]}
+            if body["status"] == "done":
+                entry["result"] = body["result"]
+            else:
+                failed += 1
+                entry["error"] = body.get("error")
+            jobs_out.append(entry)
+        _, health = http_request(f"{base}/v1/healthz")
+        _, stats = http_request(f"{base}/v1/stats")
+    finally:
+        front.stop(stop_service=True)
+    _emit({
+        "mode": "http",
+        "port": port,
+        "healthz": health,
+        "jobs": jobs_out,
+        "stats": stats,
+    })
+    return 1 if failed else 0
 
 
 def cmd_bench(args) -> int:
@@ -355,6 +425,19 @@ def build_parser() -> argparse.ArgumentParser:
                    help="async batch window: after the first pending job, "
                         "wait this long for batchmates before dispatching "
                         "(latency traded for pack density)")
+    p.add_argument("--http", type=int, default=None, metavar="PORT",
+                   help="serve over HTTP: bind the stdlib front-end on "
+                        "PORT (0 = ephemeral) and round-trip the job file "
+                        "through POST /v1/jobs + GET /v1/jobs/<id> as a "
+                        "real network client")
+    p.add_argument("--priority", type=int, default=0,
+                   help="default QoS priority for submitted jobs (higher "
+                        "= served sooner; a job file entry's own "
+                        '"priority" wins)')
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="default per-job deadline: jobs still queued this "
+                        "many ms after submit fail loudly before dispatch "
+                        '(a job file entry\'s own "deadline_ms" wins)')
     p.set_defaults(fn=cmd_serve)
 
     p = sub.add_parser("bench", help="packed vs sequential throughput microbench")

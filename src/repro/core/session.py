@@ -247,6 +247,13 @@ class SimNet:
         self.close()
         return False
 
+    def stats(self) -> Dict[str, Any]:
+        """The session's service observability: the underlying `SimServe`'s
+        atomic ``stats()`` snapshot (job/batch counters, latency and
+        occupancy histograms, circuit-breaker states). On a shared service
+        the snapshot covers every session riding it."""
+        return self.service.stats()
+
     # ------------------------------------------------------------ lifecycle
 
     @classmethod

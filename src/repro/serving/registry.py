@@ -20,6 +20,7 @@ ONE resident engine instead of the loser dying on "already registered".
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Iterable, Optional
 
 from repro.checkpoint.artifact import PredictorArtifact
@@ -27,6 +28,7 @@ from repro.core.predictor import PredictorConfig
 from repro.core.simulator import SimConfig
 from repro.serving.compile_cache import CompileCache
 from repro.serving.simnet_engine import SimNetEngine
+from repro.serving.telemetry import CircuitBreaker
 
 TEACHER_FORCED = "teacher-forced"
 
@@ -37,15 +39,28 @@ class ModelRegistry:
     (an externally built engine can be adopted via `add_engine`).
     Thread-safe: admission, lookup and eviction serialize on one
     re-entrant lock (engine *construction* is cheap — compiles happen
-    lazily at first dispatch, outside the registry)."""
+    lazily at first dispatch, outside the registry).
+
+    Each resident model owns a `CircuitBreaker`: the service records
+    every batch outcome against it and fast-fails submits against a model
+    whose breaker is open, so one repeatedly-failing artifact is isolated
+    instead of detonating batch after batch inside the drain loop.
+    Evicting a model drops its breaker too — a re-registered artifact
+    starts with a clean slate."""
 
     def __init__(self, *, mesh=None, use_kernel: bool = False,
-                 cache: Optional[CompileCache] = None):
+                 cache: Optional[CompileCache] = None,
+                 breaker_threshold: int = 5, breaker_reset_s: float = 30.0,
+                 clock=time.monotonic):
         self.mesh = mesh
         self.use_kernel = use_kernel
         self.cache = cache
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_reset_s = float(breaker_reset_s)
+        self._clock = clock
         self._lock = threading.RLock()  # add() nests into add_engine()
         self._engines: Dict[str, SimNetEngine] = {}
+        self._breakers: Dict[str, CircuitBreaker] = {}
 
     # ------------------------------------------------------------- admission
 
@@ -95,6 +110,27 @@ class ModelRegistry:
         hosting short-lived sessions should evict their entries)."""
         with self._lock:
             self._engines.pop(model_id, None)
+            self._breakers.pop(model_id, None)
+
+    # -------------------------------------------------------------- breakers
+
+    def breaker(self, model_id: str) -> CircuitBreaker:
+        """The model's circuit breaker (created lazily; survives as long
+        as the model stays resident)."""
+        with self._lock:
+            br = self._breakers.get(model_id)
+            if br is None:
+                br = CircuitBreaker(
+                    model_id, failure_threshold=self.breaker_threshold,
+                    reset_after_s=self.breaker_reset_s, clock=self._clock,
+                )
+                self._breakers[model_id] = br
+            return br
+
+    def breaker_snapshots(self) -> Dict[str, dict]:
+        with self._lock:
+            breakers = dict(self._breakers)
+        return {mid: br.snapshot() for mid, br in sorted(breakers.items())}
 
     # --------------------------------------------------------------- lookup
 

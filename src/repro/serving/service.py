@@ -32,16 +32,34 @@ without bound (backpressure the client can see and retry).
         handles = [serve.submit(t, "c3") for t in traces]   # any thread
         totals = [h.result(timeout=60) for h in handles]    # never drains
 
+The scheduler is QoS-aware: ``submit(..., priority=, deadline_ms=)``
+rides each job into dispatch. Higher priority classes are served first
+(with aging, so sustained high-priority load cannot starve the rest);
+within a class, earliest-deadline-first; a job whose deadline expires
+while still queued is failed loudly *before* dispatch (its handle raises
+`DeadlineExceeded` — never a silent drop). Under light load the lane
+budget shrinks below ``max_batch_lanes`` (``lane_budget_depth`` /
+``min_batch_lanes``) to trade pack density back for latency — the
+inverse knob of ``max_wait_ms``. Every batch outcome feeds the model's
+`CircuitBreaker`: a repeatedly-failing artifact is isolated at submit
+(`ModelUnavailable`) while the rest of the zoo keeps serving, and
+latency/queue-depth/occupancy histograms plus per-job structured logs
+(correlation ids) ride ``stats()``.
+
 Single-session use is just a service with one client: `SimNet.simulate*`
 routes through a private `SimServe` around the session's own engine
 (``SimNet(background=True)`` runs it on the drain loop). Batch mode from
-the shell: ``python -m repro serve --jobs jobs.json [--async]``.
+the shell: ``python -m repro serve --jobs jobs.json [--async]``; real
+concurrent clients go over the wire via `repro.serving.http`.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
+import math
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import features as F
@@ -54,6 +72,7 @@ from repro.serving.compile_cache import (
     lane_bucket,
 )
 from repro.serving.registry import ModelRegistry, TEACHER_FORCED
+from repro.serving.telemetry import Telemetry, log_event, new_correlation_id
 
 
 class QueueFull(RuntimeError):
@@ -62,6 +81,22 @@ class QueueFull(RuntimeError):
     Backpressure, not data loss — nothing was enqueued. Clients should
     retry after draining their outstanding handles (or run the service
     with a deeper queue / more drain capacity)."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The job's ``deadline_ms`` expired while it was still queued.
+
+    The scheduler fails such jobs loudly *before* dispatch — the handle
+    raises this instead of returning a result computed after the client
+    stopped caring — and counts them in ``stats()["jobs_expired"]``."""
+
+
+class ModelUnavailable(RuntimeError):
+    """``submit`` refused a job: the model's circuit breaker is open.
+
+    The resident artifact failed ``breaker_threshold`` consecutive
+    batches and is isolated until its cooldown elapses (then one probe
+    job is admitted). Other resident models keep serving."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +132,10 @@ class _Job:
     sim_cfg: Optional[SimConfig]
     timeit: bool
     chunk: Optional[int]
+    priority: int = 0
+    deadline_ms: Optional[float] = None
+    submit_t: float = 0.0  # service-clock timestamp of admission
+    corr_id: str = ""  # correlation id stamped on every log record
     result: Optional[WorkloadResult] = None
     batch: Optional[BatchReport] = None
     error: Optional[BaseException] = None
@@ -127,6 +166,11 @@ class JobHandle:
     def model_id(self) -> str:
         return self._job.model_id
 
+    @property
+    def correlation_id(self) -> str:
+        """The id every structured log record about this job carries."""
+        return self._job.corr_id
+
     def done(self) -> bool:
         """True once the job reached a terminal state — completed, failed
         (its batch error is recorded), or cancelled."""
@@ -140,6 +184,10 @@ class JobHandle:
     def _raise_terminal(self) -> None:
         if self._job.cancelled:
             raise RuntimeError(f"job {self.job_id} was cancelled")
+        if isinstance(self._job.error, DeadlineExceeded):
+            # not a batch failure — the scheduler refused to dispatch a
+            # job nobody is waiting for anymore; raise it undecorated
+            raise self._job.error
         if self._job.error is not None:
             # an already-failed job must re-raise its recorded batch error
             # immediately — draining here would run *unrelated* queued
@@ -193,6 +241,17 @@ class SimServe:
     round-robin: with several residents backed up, consecutive batches
     serve *different* models instead of emptying the head model's queue
     first.
+
+    Dispatch order is QoS-aware on top of that fairness: the scheduler
+    serves the highest *effective* priority class first (priority plus an
+    aging bonus of +1 per ``aging_ms`` waited — the starvation guard),
+    picks the earliest deadline inside that class (models with no
+    deadlines at stake keep taking round-robin turns), fails
+    deadline-expired jobs loudly before dispatch, and under light load
+    shrinks the batch lane budget from ``max_batch_lanes`` toward
+    ``min_batch_lanes`` (linear in queue depth up to
+    ``lane_budget_depth``) so a near-idle service favors latency over
+    pack density.
     """
 
     def __init__(
@@ -203,13 +262,22 @@ class SimServe:
         max_batch_lanes: int = 4096,
         max_queue_depth: int = 0,
         max_wait_ms: float = 5.0,
+        min_batch_lanes: int = 8,
+        lane_budget_depth: int = 0,
+        aging_ms: float = 1000.0,
+        breaker_threshold: int = 5,
+        breaker_reset_s: float = 30.0,
         mesh=None,
         use_kernel: bool = False,
         cache: Optional[CompileCache] = None,
+        clock=time.monotonic,
     ):
+        self._clock = clock
         self.cache = cache if cache is not None else global_cache()
         self.registry = registry or ModelRegistry(
-            mesh=mesh, use_kernel=use_kernel, cache=self.cache
+            mesh=mesh, use_kernel=use_kernel, cache=self.cache,
+            breaker_threshold=breaker_threshold,
+            breaker_reset_s=breaker_reset_s, clock=clock,
         )
         self.chunk = chunk
         self.max_batch_lanes = max_batch_lanes
@@ -219,6 +287,18 @@ class SimServe:
         # is seen, wait this long for batchmates before dispatching
         # (latency traded for pack density; 0 dispatches immediately)
         self.max_wait_ms = float(max_wait_ms)
+        # queue-depth-aware lane budgeting (the inverse of max_wait_ms):
+        # below lane_budget_depth pending jobs, the effective lane cap
+        # ramps linearly from min_batch_lanes up to max_batch_lanes, so a
+        # lightly loaded service dispatches small low-latency batches
+        # instead of hoarding lanes for density. 0 disables budgeting.
+        self.min_batch_lanes = int(min_batch_lanes)
+        self.lane_budget_depth = int(lane_budget_depth)
+        # starvation guard: every aging_ms a job waits adds +1 to its
+        # effective priority, so sustained high-priority traffic cannot
+        # park low-priority jobs forever. 0 disables aging.
+        self.aging_ms = float(aging_ms)
+        self.telemetry = Telemetry(clock=clock)
         self._qlock = threading.Lock()  # guards _pending + counters + _rr
         self._pending: List[_Job] = []
         self._next_id = 0
@@ -230,6 +310,8 @@ class SimServe:
         self._jobs_submitted = 0
         self._jobs_completed = 0
         self._jobs_rejected = 0  # QueueFull refusals (admission honesty)
+        self._jobs_expired = 0  # deadline_ms ran out before dispatch
+        self._jobs_breaker_rejected = 0  # open-breaker fast-fails at submit
         self._lanes_live = 0
         self._lanes_dispatched = 0
         self._dead_lane_steps = 0  # bucketing overhead, for stats honesty
@@ -350,12 +432,19 @@ class SimServe:
         name: Optional[str] = None,
         timeit: bool = False,
         chunk: Optional[int] = None,
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
     ) -> JobHandle:
         """Enqueue one workload against a resident model (None = the
         teacher-forced resident). Returns immediately; the job runs at the
         next dispatch packed together with every compatible request.
+
+        ``priority`` (higher = served sooner; default 0) and
+        ``deadline_ms`` (fail the job loudly if still queued this many ms
+        after submit; None = no deadline) ride into the scheduler.
         Raises `QueueFull` when ``max_queue_depth`` pending jobs are
-        already buffered — nothing is enqueued in that case."""
+        already buffered and `ModelUnavailable` when the model's circuit
+        breaker is open — nothing is enqueued in either case."""
         if model_id is None:
             model_id = self.registry.ensure_teacher_forced()
         elif model_id not in self.registry:
@@ -404,9 +493,27 @@ class SimServe:
                 f"n_lanes={n_lanes} invalid for a {T}-instruction workload "
                 "(need 1 <= n_lanes <= instructions)"
             )
+        # circuit breaker: a model that failed its last breaker_threshold
+        # batches is isolated HERE — fast-fail at admission, the drain
+        # loop is never touched. Checked after the static validations so
+        # an invalid request cannot consume the half-open probe slot.
+        if not self.registry.breaker(model_id).allow():
+            with self._qlock:
+                self._jobs_breaker_rejected += 1
+            log_event("job.rejected", level=logging.WARNING,
+                      reason="breaker_open", model=model_id)
+            raise ModelUnavailable(
+                f"model {model_id!r} is isolated: its circuit breaker is "
+                f"open after repeated batch failures "
+                f"({self.registry.breaker(model_id).snapshot()}); retry "
+                "after the cooldown or register a fixed artifact"
+            )
         with self._qlock:
             if self.max_queue_depth and len(self._pending) >= self.max_queue_depth:
                 self._jobs_rejected += 1
+                log_event("job.rejected", level=logging.WARNING,
+                          reason="queue_full", model=model_id,
+                          queue_depth=len(self._pending))
                 raise QueueFull(
                     f"queue is full ({len(self._pending)} pending >= "
                     f"max_queue_depth={self.max_queue_depth}); job refused — "
@@ -427,9 +534,19 @@ class SimServe:
                 sim_cfg=sim_cfg,
                 timeit=timeit,
                 chunk=chunk,
+                priority=int(priority),
+                deadline_ms=None if deadline_ms is None else float(deadline_ms),
+                submit_t=self._clock(),
+                corr_id=new_correlation_id(),
             )
             self._pending.append(job)
             self._jobs_submitted += 1
+            depth = len(self._pending)
+        self.telemetry.queue_depth.observe(depth)
+        log_event("job.submit", job_id=job.job_id, correlation_id=job.corr_id,
+                  model=model_id, name=job.name, n_lanes=job.n_lanes,
+                  priority=job.priority, deadline_ms=job.deadline_ms,
+                  queue_depth=depth)
         self._wake.set()  # the background loop opens its batch window now
         return JobHandle(self, job)
 
@@ -453,37 +570,104 @@ class SimServe:
         already guaranteed by submit() to match the resident engine's.)"""
         return (job.model_id, job.timeit)
 
+    def _effective_priority(self, job: _Job, now: float) -> int:
+        """Base priority plus the aging bonus (+1 per ``aging_ms``
+        waited) — the starvation guard that drags long-parked jobs up
+        through sustained higher-priority traffic."""
+        if self.aging_ms > 0:
+            waited_ms = max(0.0, (now - job.submit_t) * 1000.0)
+            return job.priority + int(waited_ms / self.aging_ms)
+        return job.priority
+
+    def _lane_budget(self, depth: int) -> int:
+        """The effective live-lane cap at this queue depth. Light load →
+        small batches (latency); at/above ``lane_budget_depth`` pending
+        jobs → the full ``max_batch_lanes`` (density)."""
+        if self.lane_budget_depth <= 0 or depth >= self.lane_budget_depth:
+            return self.max_batch_lanes
+        scaled = int(self.max_batch_lanes * depth / self.lane_budget_depth)
+        return max(1, min(self.min_batch_lanes, self.max_batch_lanes), scaled)
+
+    @staticmethod
+    def _deadline_at(job: _Job) -> float:
+        return (math.inf if job.deadline_ms is None
+                else job.submit_t + job.deadline_ms / 1000.0)
+
     def _take_batch(self) -> Tuple[Optional[Tuple], List[_Job]]:
-        """Atomically pop the next batch: pick the group whose model is the
-        round-robin successor of the last-served one (per-model fairness —
-        a model with a deep backlog cannot starve the others), then pack
-        its pending jobs FIFO up to ``max_batch_lanes`` live lanes."""
+        """Atomically pop the next batch, QoS-aware.
+
+        First, every queued job whose deadline already passed is failed
+        loudly (error pinned, counted — never dispatched, never silently
+        dropped). Then the scheduler picks the group to serve: among the
+        jobs of the highest *effective* priority (base + aging bonus),
+        the one with the earliest deadline wins; with no deadlines at
+        stake, models keep taking round-robin turns (per-model fairness —
+        a model with a deep backlog cannot starve the others). The chosen
+        group's jobs pack in QoS order (priority desc, deadline asc,
+        FIFO) up to the queue-depth-aware lane budget."""
+        now = self._clock()
+        expired: List[_Job] = []
+        key: Optional[Tuple] = None
+        batch: List[_Job] = []
         with self._qlock:
-            if not self._pending:
-                return None, []
-            keys: List[Tuple] = []
-            for job in self._pending:
-                k = self._group_key(job)
-                if k not in keys:
-                    keys.append(k)
-            key = self._next_group(keys)
-            batch: List[_Job] = []
-            lanes = 0
-            rest: List[_Job] = []
-            for job in self._pending:
-                # the first job of the group always rides (a single job
-                # wider than the cap gets its own batch — it must not
-                # wedge the queue)
-                if self._group_key(job) == key and (
-                    not batch or lanes + job.n_lanes <= self.max_batch_lanes
-                ):
-                    batch.append(job)
-                    lanes += job.n_lanes
+            if any(j.deadline_ms is not None for j in self._pending):
+                live = []
+                for job in self._pending:
+                    if self._deadline_at(job) < now:
+                        expired.append(job)
+                    else:
+                        live.append(job)
+                if expired:
+                    self._pending = live
+                    self._jobs_expired += len(expired)
+            if self._pending:
+                eff = {j.job_id: self._effective_priority(j, now)
+                       for j in self._pending}
+                top = max(eff.values())
+                top_jobs = [j for j in self._pending if eff[j.job_id] == top]
+                if any(j.deadline_ms is not None for j in top_jobs):
+                    # earliest deadline first across the top class
+                    lead = min(top_jobs,
+                               key=lambda j: (self._deadline_at(j), j.job_id))
+                    key = self._group_key(lead)
                 else:
-                    rest.append(job)
-            self._pending = rest
-            self._last_model = key[0]
-            return key, batch
+                    keys: List[Tuple] = []
+                    for job in top_jobs:
+                        k = self._group_key(job)
+                        if k not in keys:
+                            keys.append(k)
+                    key = self._next_group(keys)
+                budget = self._lane_budget(len(self._pending))
+                group = sorted(
+                    (j for j in self._pending if self._group_key(j) == key),
+                    key=lambda j: (-eff[j.job_id], self._deadline_at(j),
+                                   j.job_id),
+                )
+                lanes = 0
+                for job in group:
+                    # the first job of the group always rides (a single
+                    # job wider than the cap gets its own batch — it must
+                    # not wedge the queue)
+                    if not batch or lanes + job.n_lanes <= budget:
+                        batch.append(job)
+                        lanes += job.n_lanes
+                taken = {id(j) for j in batch}
+                self._pending = [j for j in self._pending
+                                 if id(j) not in taken]
+                self._last_model = key[0]
+        for job in expired:
+            waited_ms = (now - job.submit_t) * 1000.0
+            job.error = DeadlineExceeded(
+                f"job {job.job_id} ({job.name!r}) missed its deadline: "
+                f"queued {waited_ms:.0f} ms > deadline_ms={job.deadline_ms:g} "
+                "— failed before dispatch"
+            )
+            job.done_evt.set()
+            log_event("job.deadline_expired", level=logging.WARNING,
+                      job_id=job.job_id, correlation_id=job.corr_id,
+                      model=job.model_id, waited_ms=waited_ms,
+                      deadline_ms=job.deadline_ms)
+        return key, batch
 
     def _next_group(self, keys: Sequence[Tuple]) -> Tuple:
         """Round-robin across models: the waiting group whose model id is
@@ -522,11 +706,21 @@ class SimServe:
                 for job in batch:
                     job.error = e
                     job.done_evt.set()
+                self.registry.breaker(key[0]).record_failure()
+                log_event("batch.failed", level=logging.ERROR,
+                          model=key[0], job_ids=[j.job_id for j in batch],
+                          correlation_ids=[j.corr_id for j in batch],
+                          error=repr(e))
                 raise
         return reports
 
     def _run_batch(self, model_id: str, jobs: List[_Job]) -> BatchReport:
         engine = self.registry.get(model_id)
+        t_dispatch = self._clock()
+        for j in jobs:
+            self.telemetry.queue_wait_ms.observe(
+                (t_dispatch - j.submit_t) * 1000.0
+            )
         arrs = [j.arrs for j in jobs]
         lanes = [j.n_lanes for j in jobs]
         cfgs = [j.sim_cfg or engine.sim_cfg for j in jobs]
@@ -549,10 +743,22 @@ class SimServe:
             throughput_ips=float(res["throughput_ips"]),
             cache=dict(res["cache"]),
         )
+        t_done = self._clock()
         for i, job in enumerate(jobs):
             job.result = self._workload_result(job, res, i)
             job.batch = report
             job.done_evt.set()  # result is pinned — waiters may wake now
+            self.telemetry.service_ms.observe((t_done - job.submit_t) * 1000.0)
+            log_event("job.complete", job_id=job.job_id,
+                      correlation_id=job.corr_id, model=model_id,
+                      name=job.name, total_cycles=job.result.total_cycles,
+                      latency_ms=(t_done - job.submit_t) * 1000.0)
+        self.telemetry.batch_jobs.observe(len(jobs))
+        self.registry.breaker(model_id).record_success()
+        log_event("batch.dispatch", model=model_id, n_jobs=len(jobs),
+                  n_live_lanes=report.n_live_lanes, n_lanes=report.n_lanes,
+                  seconds=report.seconds,
+                  correlation_ids=[j.corr_id for j in jobs])
         with self._qlock:  # concurrent drains must not lose counter updates
             self._jobs_completed += len(jobs)
             self._lanes_live += report.n_live_lanes
@@ -601,22 +807,41 @@ class SimServe:
         return tuple(self._batches)
 
     def stats(self) -> Dict[str, Any]:
-        return {
-            "jobs_submitted": self._jobs_submitted,
-            "jobs_completed": self._jobs_completed,
-            "jobs_rejected": self._jobs_rejected,
-            "jobs_pending": len(self._pending),
-            "batches": self._n_batches,
+        """A consistent snapshot of the service counters.
+
+        The counter block is copied under the queue lock — a dispatch
+        updating several counters can never be observed halfway through
+        (torn reads used to show e.g. ``jobs_completed`` bumped before
+        ``batches``, making ``jobs_per_batch`` momentarily wrong). The
+        telemetry histograms snapshot lock-free on their own seqlocks."""
+        with self._qlock:
+            snap: Dict[str, Any] = {
+                "jobs_submitted": self._jobs_submitted,
+                "jobs_completed": self._jobs_completed,
+                "jobs_rejected": self._jobs_rejected,
+                "jobs_expired": self._jobs_expired,
+                "jobs_breaker_rejected": self._jobs_breaker_rejected,
+                "jobs_pending": len(self._pending),
+                "batches": self._n_batches,
+                "lanes_live": self._lanes_live,
+                "lanes_dispatched": self._lanes_dispatched,
+                "dead_lane_steps": self._dead_lane_steps,
+                "jobs_per_batch": (
+                    self._jobs_completed / self._n_batches
+                    if self._n_batches else 0.0
+                ),
+                "loop_errors": self._loop_errors,
+            }
+        snap.update({
             "models_resident": sorted(self.registry.ids()),
-            "lanes_live": self._lanes_live,
-            "lanes_dispatched": self._lanes_dispatched,
-            "dead_lane_steps": self._dead_lane_steps,
-            "jobs_per_batch": (
-                self._jobs_completed / self._n_batches if self._n_batches else 0.0
-            ),
             "running": self.running,
-            "loop_errors": self._loop_errors,
             "max_queue_depth": self.max_queue_depth,
             "max_wait_ms": self.max_wait_ms,
+            "min_batch_lanes": self.min_batch_lanes,
+            "lane_budget_depth": self.lane_budget_depth,
+            "aging_ms": self.aging_ms,
+            "telemetry": self.telemetry.snapshot(),
+            "breakers": self.registry.breaker_snapshots(),
             "cache": self.cache.stats(),
-        }
+        })
+        return snap

@@ -1,0 +1,296 @@
+"""QoS scheduling: priority classes, EDF, deadlines, lane budgeting, aging.
+
+Everything here drives `_take_batch` deterministically through an
+injectable fake clock and explicit ``drain()`` calls — no background
+thread, no wall-clock sleeps. The capstone is the safety property: QoS
+only ever *reorders* dispatch, so whatever mix of priorities and
+deadlines rides submit, every job's totals stay bit-identical to a plain
+FIFO run of the same workload.
+"""
+import pytest
+from conftest import synth_arrays
+
+from repro.core.simulator import SimConfig
+from repro.serving.compile_cache import CompileCache
+from repro.serving.service import DeadlineExceeded, SimServe
+
+try:  # hypothesis drives the property test when available; without it a
+    # fixed adversarial example set keeps the property exercised
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+CFG = SimConfig(ctx_len=8)
+TRACES = {f"w{i}": synth_arrays(48 + 16 * i, 10 + i) for i in range(3)}
+MODELS = ("alpha", "beta")
+
+# one compile cache for the whole module: every SimServe below shares the
+# same executables, so hypothesis examples pay compile cost exactly once
+SHARED_CACHE = CompileCache()
+
+
+class FakeClock:
+    """A manually advanced monotonic clock (seconds)."""
+
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += float(dt)
+
+
+def _make_serve(clock=None, **kw):
+    kw.setdefault("cache", SHARED_CACHE)
+    serve = SimServe(clock=clock or FakeClock(), **kw)
+    for mid in MODELS:
+        serve.register(mid, sim_cfg=CFG)
+    return serve
+
+
+# ---------------------------------------------------------------- priority
+
+def test_higher_priority_class_dispatches_first():
+    """Across models, the highest effective-priority class is served
+    before round-robin order even gets a say."""
+    serve = _make_serve()
+    serve.submit(TRACES["w0"], "alpha", n_lanes=2, priority=0)
+    serve.submit(TRACES["w0"], "beta", n_lanes=2, priority=5)
+    reports = serve.drain()
+    assert [r.model_id for r in reports] == ["beta", "alpha"]
+
+
+def test_priority_orders_packing_within_group():
+    """When the lane budget splits a group, high-priority jobs ride the
+    first batch; equal priorities keep FIFO order."""
+    serve = _make_serve(max_batch_lanes=4)
+    h1 = serve.submit(TRACES["w0"], "alpha", n_lanes=2, priority=0)
+    h2 = serve.submit(TRACES["w1"], "alpha", n_lanes=2, priority=0)
+    h3 = serve.submit(TRACES["w2"], "alpha", n_lanes=2, priority=9)
+    reports = serve.drain()
+    assert [r.job_ids for r in reports] == [
+        (h3.job_id, h1.job_id),  # priority 9 leads, then FIFO
+        (h2.job_id,),
+    ]
+
+
+def test_equal_priorities_keep_round_robin_fairness():
+    """With one flat priority class the scheduler is exactly the PR 5
+    round-robin: a deep alpha backlog cannot starve beta."""
+    serve = _make_serve(max_batch_lanes=4)
+    for _ in range(4):
+        serve.submit(TRACES["w0"], "alpha", n_lanes=2)
+    serve.submit(TRACES["w1"], "beta", n_lanes=2)
+    reports = serve.drain()
+    assert [r.model_id for r in reports] == ["alpha", "beta", "alpha"]
+
+
+# --------------------------------------------------------------------- EDF
+
+def test_earliest_deadline_first_within_class():
+    """Same priority class: the job with the nearest deadline picks the
+    group to serve, regardless of submit order and round-robin."""
+    serve = _make_serve()
+    serve.submit(TRACES["w0"], "alpha", n_lanes=2, deadline_ms=500.0)
+    serve.submit(TRACES["w1"], "beta", n_lanes=2, deadline_ms=100.0)
+    reports = serve.drain()
+    assert [r.model_id for r in reports] == ["beta", "alpha"]
+
+
+def test_priority_beats_deadline_across_classes():
+    """EDF only breaks ties *within* the top priority class — a tight
+    deadline on a low-priority job does not outrank a high-priority one."""
+    serve = _make_serve()
+    serve.submit(TRACES["w0"], "alpha", n_lanes=2, priority=0,
+                 deadline_ms=50.0)
+    serve.submit(TRACES["w1"], "beta", n_lanes=2, priority=5)
+    reports = serve.drain()
+    assert [r.model_id for r in reports] == ["beta", "alpha"]
+
+
+# --------------------------------------------------------------- deadlines
+
+def test_expired_deadline_fails_loudly_before_dispatch():
+    clock = FakeClock()
+    serve = _make_serve(clock)
+    doomed = serve.submit(TRACES["w0"], "alpha", n_lanes=2, deadline_ms=100.0)
+    safe = serve.submit(TRACES["w1"], "alpha", n_lanes=2)
+    clock.advance(0.2)  # 200 ms > the 100 ms deadline
+    reports = serve.drain()
+    # never dispatched, never silently dropped: the handle is terminal
+    # with DeadlineExceeded and the job id is absent from every batch
+    assert doomed.done()
+    with pytest.raises(DeadlineExceeded, match="missed its deadline"):
+        doomed.result()
+    assert all(doomed.job_id not in r.job_ids for r in reports)
+    assert safe.result().total_cycles > 0
+    stats = serve.stats()
+    assert stats["jobs_expired"] == 1
+    assert stats["jobs_completed"] == 1
+
+
+def test_deadline_met_when_dispatched_in_time():
+    clock = FakeClock()
+    serve = _make_serve(clock)
+    h = serve.submit(TRACES["w0"], "alpha", n_lanes=2, deadline_ms=100.0)
+    clock.advance(0.05)  # 50 ms < 100 ms: still live
+    serve.drain()
+    assert h.result().total_cycles > 0
+    assert serve.stats()["jobs_expired"] == 0
+
+
+def test_expired_job_does_not_hold_a_round_robin_turn():
+    """Expiry happens before group selection: an expired beta job must
+    not burn beta's turn or distort the alpha dispatch."""
+    clock = FakeClock()
+    serve = _make_serve(clock)
+    doomed = serve.submit(TRACES["w0"], "beta", n_lanes=2, deadline_ms=10.0)
+    h = serve.submit(TRACES["w1"], "alpha", n_lanes=2)
+    clock.advance(1.0)
+    reports = serve.drain()
+    assert [r.model_id for r in reports] == ["alpha"]
+    assert doomed.done() and h.result().total_cycles > 0
+
+
+# ------------------------------------------------------------- lane budget
+
+def test_lane_budget_shrinks_batches_under_light_load():
+    """Below ``lane_budget_depth`` pending jobs the effective lane cap
+    drops toward ``min_batch_lanes``: a near-idle service dispatches
+    small low-latency batches instead of hoarding lanes."""
+    light = _make_serve(max_batch_lanes=8, min_batch_lanes=2,
+                        lane_budget_depth=4)
+    for name in ("w0", "w1"):
+        light.submit(TRACES[name], "alpha", n_lanes=3)
+    # depth 2 -> budget int(8 * 2/4) = 4: one 3-lane job per batch
+    assert [r.n_jobs for r in light.drain()] == [1, 1]
+
+    heavy = _make_serve(max_batch_lanes=8, min_batch_lanes=2,
+                        lane_budget_depth=4)
+    for name in ("w0", "w1", "w0", "w1"):
+        heavy.submit(TRACES[name], "alpha", n_lanes=3)
+    # depth 4 >= lane_budget_depth: the full 8-lane cap packs 2 jobs; the
+    # budget re-shrinks batch by batch as the drain empties the queue
+    assert [r.n_jobs for r in heavy.drain()] == [2, 1, 1]
+
+
+def test_lane_budget_disabled_by_default():
+    serve = _make_serve(max_batch_lanes=8)
+    assert serve.lane_budget_depth == 0
+    for name in ("w0", "w1"):
+        serve.submit(TRACES[name], "alpha", n_lanes=3)
+    assert [r.n_jobs for r in serve.drain()] == [2]
+
+
+def test_lane_budget_never_wedges_a_wide_job():
+    """A single job wider than the shrunken budget still rides alone —
+    budgeting trades density for latency, it must never strand work."""
+    serve = _make_serve(max_batch_lanes=16, min_batch_lanes=1,
+                        lane_budget_depth=8)
+    h = serve.submit(TRACES["w0"], "alpha", n_lanes=12)  # depth 1 -> budget 2
+    serve.drain()
+    assert h.result().n_lanes == 12
+
+
+# ------------------------------------------------------------------- aging
+
+def test_aging_rescues_starved_low_priority_job():
+    """The starvation guard: a parked priority-0 job's effective priority
+    climbs +1 per ``aging_ms`` until it outranks fresh high-priority
+    traffic."""
+    clock = FakeClock()
+    serve = _make_serve(clock, aging_ms=100.0)
+    old = serve.submit(TRACES["w0"], "alpha", n_lanes=2, priority=0)
+    clock.advance(0.45)  # old's effective priority: 0 + int(450/100) = 4
+    serve.submit(TRACES["w1"], "beta", n_lanes=2, priority=3)
+    reports = serve.drain()
+    assert [r.model_id for r in reports] == ["alpha", "beta"]
+    assert old.result().total_cycles > 0
+
+
+def test_aging_disabled_serves_strict_priority():
+    clock = FakeClock()
+    serve = _make_serve(clock, aging_ms=0.0)
+    serve.submit(TRACES["w0"], "alpha", n_lanes=2, priority=0)
+    clock.advance(10.0)  # however long it waited, priority 0 stays 0
+    serve.submit(TRACES["w1"], "beta", n_lanes=2, priority=3)
+    assert [r.model_id for r in serve.drain()] == ["beta", "alpha"]
+
+
+# ------------------------------------------- the safety property (capstone)
+
+_BASELINE = {}
+
+
+def _fifo_baseline():
+    """Totals of every workload under plain FIFO, one job per drain
+    (computed lazily once — not at collection time)."""
+    if not _BASELINE:
+        serve = _make_serve()
+        for name, arrs in TRACES.items():
+            h = serve.submit(arrs, "alpha", n_lanes=2)
+            serve.drain()
+            _BASELINE[name] = (h.result().total_cycles, h.result().overflow)
+    return _BASELINE
+
+
+def _check_qos_preserves_totals(jobs, lane_budget_depth):
+    """The QoS safety property: priorities, deadlines and lane budgeting
+    reorder and re-pack dispatch, but every job's totals stay
+    bit-identical to the FIFO baseline of its workload. (The clock is
+    frozen, so no submitted deadline can expire mid-example.)"""
+    serve = _make_serve(max_batch_lanes=6, min_batch_lanes=2,
+                        lane_budget_depth=lane_budget_depth)
+    handles = [
+        (name, serve.submit(TRACES[name], mid, n_lanes=2, priority=prio,
+                            deadline_ms=dl))
+        for name, mid, prio, dl in jobs
+    ]
+    serve.drain()
+    baseline = _fifo_baseline()
+    for name, h in handles:
+        assert (h.result().total_cycles, h.result().overflow) == baseline[name]
+    stats = serve.stats()
+    assert stats["jobs_expired"] == 0
+    assert stats["jobs_completed"] == len(jobs)
+
+
+if given is not None:
+
+    @given(
+        jobs=st.lists(
+            st.tuples(
+                st.sampled_from(sorted(TRACES)),
+                st.sampled_from(MODELS),
+                st.integers(-3, 3),  # priority
+                st.one_of(st.none(), st.floats(1.0, 1e6)),  # deadline_ms
+            ),
+            min_size=1, max_size=6,
+        ),
+        lane_budget_depth=st.integers(0, 4),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_qos_reordering_never_changes_totals(jobs, lane_budget_depth):
+        _check_qos_preserves_totals(jobs, lane_budget_depth)
+
+else:
+
+    _FIXED_EXAMPLES = [
+        # inverted priorities + mixed deadlines across both models
+        ([("w0", "alpha", 3, None), ("w1", "beta", -3, 10.0),
+          ("w2", "alpha", 0, 1.0), ("w0", "beta", 2, None)], 3),
+        # one flat class, deadlines only, budget disabled
+        ([("w1", "alpha", 0, 50.0), ("w1", "alpha", 0, 5.0),
+          ("w2", "beta", 0, 500.0)], 0),
+        # repeated workload across priority extremes, tight budget depth
+        ([("w0", "alpha", -2, None), ("w0", "alpha", 3, None),
+          ("w0", "beta", 3, 1e6), ("w2", "alpha", 1, None),
+          ("w1", "beta", -1, 2.0)], 4),
+        ([("w2", "beta", 2, None)], 1),
+    ]
+
+    @pytest.mark.parametrize("jobs,lane_budget_depth", _FIXED_EXAMPLES)
+    def test_qos_reordering_never_changes_totals(jobs, lane_budget_depth):
+        _check_qos_preserves_totals(jobs, lane_budget_depth)

@@ -485,3 +485,39 @@ def test_cli_serve_sync_queue_depth_backpressure(tmp_path, capsys):
     assert [j["id"] for j in out["jobs"]] == ["j0", "j1", "j2"]
     assert out["stats"]["jobs_completed"] == 3
     assert out["stats"]["jobs_rejected"] >= 2  # backpressure fired and recovered
+
+
+# ---------------------------------------------------------- stats atomicity
+
+def test_stats_counter_snapshot_is_atomic():
+    """Failing-before regression: stats() used to read each counter
+    without the queue lock, so a dispatch mid-update could be observed
+    halfway through (jobs_completed already bumped, batches not yet) and
+    the jobs_per_batch readout went momentarily wrong. The counter block
+    now copies under _qlock: a reader landing mid-update blocks until the
+    writer finishes instead of returning the torn state."""
+    serve = _make_serve(cache=CompileCache())
+    for name in ("w0", "w1"):
+        serve.submit(TRACES[name], "alpha", n_lanes=2)
+    serve.drain()  # one 2-job batch: jobs_completed=2, batches=1
+
+    done = threading.Event()
+    snap = {}
+
+    def read():
+        snap["stats"] = serve.stats()
+        done.set()
+
+    # freeze a dispatch mid-counter-update: lock held, jobs_completed
+    # bumped, the batch counter not yet
+    with serve._qlock:
+        serve._jobs_completed += 3
+        t = threading.Thread(target=read)
+        t.start()
+        assert not done.wait(0.3)  # pre-fix, stats() returned the tear here
+        serve._jobs_completed -= 3  # the writer completes consistently
+    t.join(10)
+    assert done.is_set()
+    s = snap["stats"]
+    assert s["jobs_completed"] == 2 and s["batches"] == 1
+    assert s["jobs_per_batch"] * s["batches"] == s["jobs_completed"]

@@ -1,0 +1,327 @@
+"""SimServe over the wire: end-to-end socket tests for the HTTP front-end.
+
+Real `http.client` requests against a live `ThreadingHTTPServer` bound to
+an ephemeral port — no mocked transport. The acceptance guard extends the
+PR 5 stress test over the network: concurrent HTTP clients must be
+bit-identical to in-process submit/drain, with shared batches
+(jobs_per_batch > 1) and zero lost or duplicated job ids. Error mapping
+(malformed JSON / unknown model / QueueFull / open breaker) and the
+healthz flip on stop() are locked down alongside.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+from conftest import synth_arrays
+
+from repro.core.simulator import SimConfig
+from repro.serving.compile_cache import CompileCache
+from repro.serving.http import SimServeHTTP, http_request, wait_job
+from repro.serving.service import SimServe
+
+CFG = SimConfig(ctx_len=8)
+TRACES = {f"w{i}": synth_arrays(64 + 16 * i, i) for i in range(4)}
+MODELS = ("alpha", "beta")
+
+
+def _make_serve(**kw):
+    kw.setdefault("cache", CompileCache())
+    serve = SimServe(**kw)
+    for mid in MODELS:
+        serve.register(mid, sim_cfg=CFG)
+    return serve
+
+
+def _wire(arrs):
+    return {k: np.asarray(v).tolist() for k, v in arrs.items()}
+
+
+def _baseline(jobs):
+    """One-batch-per-job sequential in-process reference totals."""
+    seq = _make_serve()
+    out = {}
+    for mid, name in jobs:
+        h = seq.submit(TRACES[name], mid, n_lanes=2)
+        seq.drain()
+        out[(mid, name)] = (h.result().total_cycles, h.result().overflow)
+    return out
+
+
+@pytest.fixture
+def live():
+    """A started service + bound front-end on an ephemeral port."""
+    serve = _make_serve(max_wait_ms=5.0)
+    front = SimServeHTTP(serve)
+    front.start()
+    yield serve, front
+    front.stop(stop_service=True)
+
+
+# --------------------------------------------------------------- round trip
+
+def test_http_single_job_bit_identical_to_in_process(live):
+    serve, front = live
+    ref = _baseline([("alpha", "w0")])[("alpha", "w0")]
+    st, body = http_request(
+        f"{front.url}/v1/jobs", "POST",
+        {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+         "id": "wire0"},
+    )
+    assert st == 202
+    assert body["status"] == "pending"
+    assert body["model"] == "alpha"
+    assert len(body["correlation_id"]) == 12
+    done = wait_job(front.url, body["job_id"], timeout=120)
+    assert done["status"] == "done"
+    assert done["result"]["name"] == "wire0"
+    assert (done["result"]["total_cycles"], done["result"]["overflow"]) == ref
+
+
+def _run_http_clients(front, jobs, n_clients, timeout=240):
+    """Each client thread POSTs the full grid over the wire and polls its
+    own results. Returns (results, job_ids, errors)."""
+    results, job_ids, errors = {}, [], []
+    jlock = threading.Lock()
+    gate = threading.Barrier(n_clients)
+
+    def client(c):
+        try:
+            gate.wait(timeout=10)
+            posted = []
+            for mid, name in jobs:
+                st, body = http_request(
+                    f"{front.url}/v1/jobs", "POST",
+                    {"trace": _wire(TRACES[name]), "model": mid, "lanes": 2,
+                     "id": f"c{c}-{mid}-{name}"},
+                )
+                assert st == 202, (st, body)
+                posted.append((mid, name, body["job_id"]))
+            with jlock:
+                job_ids.extend(jid for _, _, jid in posted)
+            for mid, name, jid in posted:
+                done = wait_job(front.url, jid, timeout=timeout)
+                assert done["status"] == "done", done
+                results[(c, mid, name)] = (done["result"]["total_cycles"],
+                                           done["result"]["overflow"])
+        except Exception as e:  # pragma: no cover - failure readout
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=timeout + 60)
+    return results, job_ids, errors
+
+
+def test_http_concurrent_clients_bit_identical(live):
+    """≥2 HTTP client threads × 2 models through the live loop: totals
+    bit-identical to in-process sequential drain, batches shared, no job
+    id lost or duplicated."""
+    serve, front = live
+    jobs = [(mid, name) for mid in MODELS for name in ("w0", "w1")]
+    baseline = _baseline(jobs)
+    results, job_ids, errors = _run_http_clients(front, jobs, n_clients=3)
+    assert not errors
+    assert len(results) == 3 * len(jobs)  # nothing lost
+    for (c, mid, name), got in results.items():
+        assert got == baseline[(mid, name)], (c, mid, name)
+    assert len(job_ids) == len(set(job_ids)) == 3 * len(jobs)  # no dup ids
+    st, stats = http_request(f"{front.url}/v1/stats")
+    assert st == 200
+    assert stats["jobs_completed"] == 3 * len(jobs)
+    assert stats["jobs_per_batch"] > 1  # batches genuinely shared over the wire
+
+
+@pytest.mark.slow
+def test_http_stress_4_clients_full_grid(live):
+    """The full-profile stress job: 4 HTTP clients × the whole model ×
+    workload grid, extending the PR 5 threaded stress over real sockets."""
+    serve, front = live
+    jobs = [(mid, name) for mid in MODELS for name in TRACES]
+    baseline = _baseline(jobs)
+    results, job_ids, errors = _run_http_clients(front, jobs, n_clients=4)
+    assert not errors
+    assert len(results) == 4 * len(jobs)
+    for key, got in results.items():
+        assert got == baseline[key[1:]], key
+    assert len(job_ids) == len(set(job_ids)) == 4 * len(jobs)
+    stats = serve.stats()
+    assert stats["jobs_completed"] == 4 * len(jobs)
+    assert stats["jobs_per_batch"] > 1
+    assert stats["loop_errors"] == 0
+    dispatched = [jid for b in serve.batches for jid in b.job_ids]
+    assert len(dispatched) == len(set(dispatched)) == stats["jobs_completed"]
+
+
+# ------------------------------------------------------------ error mapping
+
+def test_http_malformed_json_400(live):
+    serve, front = live
+    st, body = http_request(f"{front.url}/v1/jobs", "POST", payload=None)
+    assert st == 400 and body["error"]["type"] == "malformed_json"
+
+    import urllib.request
+    req = urllib.request.Request(
+        f"{front.url}/v1/jobs", data=b"{not json", method="POST",
+        headers={"Content-Type": "application/json"},
+    )
+    import urllib.error
+    with pytest.raises(urllib.error.HTTPError) as exc:
+        urllib.request.urlopen(req, timeout=30)
+    with exc.value:
+        assert exc.value.code == 400
+        err = json.loads(exc.value.read())["error"]
+    assert err["type"] == "malformed_json"
+
+    st, body = http_request(f"{front.url}/v1/jobs", "POST",
+                            payload=["not", "an", "object"])
+    assert st == 400 and body["error"]["type"] == "malformed_json"
+
+
+def test_http_bad_trace_400(live):
+    serve, front = live
+    st, body = http_request(f"{front.url}/v1/jobs", "POST",
+                            {"trace": {"feat": [[1, 2], [3, 4]]}})
+    assert st == 400 and body["error"]["type"] == "bad_trace"
+    st, body = http_request(f"{front.url}/v1/jobs", "POST", {"id": "x"})
+    assert st == 400 and body["error"]["type"] == "bad_request"
+
+
+def test_http_unknown_model_404(live):
+    serve, front = live
+    st, body = http_request(
+        f"{front.url}/v1/jobs", "POST",
+        {"trace": _wire(TRACES["w0"]), "model": "ghost"},
+    )
+    assert st == 404
+    assert body["error"]["type"] == "unknown_model"
+    assert "ghost" in body["error"]["message"]
+
+
+def test_http_queue_full_429():
+    """A depth-1 queue on a NOT-started service (nothing drains): the
+    second POST must map QueueFull to 429 with a structured body."""
+    serve = _make_serve(max_queue_depth=1)
+    with SimServeHTTP(serve, start_service=False) as front:
+        st, _ = http_request(f"{front.url}/v1/jobs", "POST",
+                             {"trace": _wire(TRACES["w0"]), "model": "alpha",
+                              "lanes": 2})
+        assert st == 202
+        st, body = http_request(f"{front.url}/v1/jobs", "POST",
+                                {"trace": _wire(TRACES["w1"]), "model": "alpha",
+                                 "lanes": 2})
+        assert st == 429
+        assert body["error"]["type"] == "queue_full"
+        assert "max_queue_depth=1" in body["error"]["message"]
+    assert serve.stats()["jobs_rejected"] == 1
+
+
+def test_http_unknown_job_and_routes_404(live):
+    serve, front = live
+    st, body = http_request(f"{front.url}/v1/jobs/99999")
+    assert st == 404 and body["error"]["type"] == "unknown_job"
+    st, body = http_request(f"{front.url}/v1/jobs/notanint")
+    assert st == 400 and body["error"]["type"] == "bad_request"
+    st, body = http_request(f"{front.url}/v1/nope")
+    assert st == 404 and body["error"]["type"] == "not_found"
+    st, body = http_request(f"{front.url}/v1/healthz", "POST", {})
+    assert st == 404 and body["error"]["type"] == "not_found"
+
+
+def test_http_failed_batch_surfaces_structured_error(live, monkeypatch):
+    serve, front = live
+    engine = serve.registry.get("beta")
+    monkeypatch.setattr(
+        engine, "simulate_many",
+        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("device lost")),
+    )
+    st, body = http_request(
+        f"{front.url}/v1/jobs", "POST",
+        {"trace": _wire(TRACES["w0"]), "model": "beta", "lanes": 2},
+    )
+    assert st == 202
+    done = wait_job(front.url, body["job_id"], timeout=60)
+    assert done["status"] == "failed"
+    assert done["error"]["type"] == "batch_failed"
+    assert "device lost" in done["error"]["message"]
+
+
+def test_http_deadline_expired_maps_to_failed_status():
+    """A job whose deadline lapses before dispatch reports status=failed
+    with error type deadline_exceeded over the wire."""
+    serve = _make_serve(max_queue_depth=0)
+    with SimServeHTTP(serve, start_service=False) as front:
+        st, body = http_request(
+            f"{front.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+             "deadline_ms": 0.0},
+        )
+        assert st == 202
+        serve.drain()  # the scheduler expires it instead of dispatching
+        done = wait_job(front.url, body["job_id"], timeout=30)
+        assert done["status"] == "failed"
+        assert done["error"]["type"] == "deadline_exceeded"
+
+
+# ----------------------------------------------------------------- healthz
+
+def test_healthz_flips_on_stop(live):
+    serve, front = live
+    st, body = http_request(f"{front.url}/v1/healthz")
+    assert st == 200 and body["ok"] is True and body["running"] is True
+    serve.stop()
+    st, body = http_request(f"{front.url}/v1/healthz")
+    assert st == 503 and body["ok"] is False and body["running"] is False
+
+
+def test_http_stats_histograms_count_jobs(live):
+    serve, front = live
+    for name in ("w0", "w1", "w2"):
+        st, body = http_request(
+            f"{front.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES[name]), "model": "alpha", "lanes": 2},
+        )
+        wait_job(front.url, body["job_id"], timeout=120)
+    st, stats = http_request(f"{front.url}/v1/stats")
+    assert st == 200
+    tele = stats["telemetry"]
+    assert tele["service_ms"]["count"] == 3
+    assert tele["queue_wait_ms"]["count"] == 3
+    assert tele["queue_depth"]["count"] == 3  # one depth sample per admission
+    assert sum(tele["service_ms"]["counts"]) == 3
+    assert stats["breakers"]["alpha"]["state"] == "closed"
+
+
+# --------------------------------------------------------------- CLI smoke
+
+def test_cli_serve_http_smoke(tmp_path, capsys):
+    """`python -m repro serve --http 0` (the CI fast-tier smoke): the job
+    file round-trips through a live ephemeral-port server."""
+    from repro.cli import main
+
+    spec = {
+        "jobs": [
+            {"id": "a", "bench": "sim_loop", "n": 2000, "lanes": 1},
+            {"id": "b", "bench": "mlb_stream", "n": 2000, "lanes": 2,
+             "priority": 2},
+        ]
+    }
+    jobs = tmp_path / "jobs.json"
+    jobs.write_text(json.dumps(spec))
+    rc = main([
+        "serve", "--jobs", str(jobs), "--cache-dir", str(tmp_path / "tr"),
+        "--http", "0", "--priority", "1", "--max-wait-ms", "5",
+    ])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["mode"] == "http"
+    assert out["port"] > 0
+    assert out["healthz"]["ok"] is True
+    assert [j["id"] for j in out["jobs"]] == ["a", "b"]
+    assert all(j["status"] == "done" for j in out["jobs"])
+    assert out["jobs"][0]["result"]["cpi_error"] == 0.0
+    assert out["stats"]["jobs_completed"] == 2
+    assert out["stats"]["telemetry"]["service_ms"]["count"] == 2

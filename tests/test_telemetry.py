@@ -1,0 +1,366 @@
+"""Observability layer: histograms, seqlock snapshots, circuit breakers.
+
+The histogram percentile contract is checked against numpy's
+``inverted_cdf`` (same rank definition — the histogram answer must land
+in the bucket holding numpy's exact answer); counter exactness and
+snapshot consistency are checked under real threaded writers; the
+breaker's state machine runs on an injected fake clock, and the
+integration regression pins the acceptance bullet: a repeatedly-failing
+model is rejected *at submit* — without waking the drain loop — while
+other residents keep serving.
+"""
+import bisect
+import logging
+import threading
+
+import numpy as np
+import pytest
+from conftest import synth_arrays
+
+from repro.core.simulator import SimConfig
+from repro.serving.compile_cache import CompileCache
+from repro.serving.service import ModelUnavailable, SimServe
+from repro.serving.telemetry import (
+    CLOSED,
+    HALF_OPEN,
+    LATENCY_BOUNDS_MS,
+    OPEN,
+    CircuitBreaker,
+    Histogram,
+    Telemetry,
+    log_event,
+    new_correlation_id,
+)
+
+try:  # hypothesis sharpens the percentile property when available
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += float(dt)
+
+
+# -------------------------------------------------------------- histograms
+
+def test_histogram_rejects_bad_bounds():
+    for bad in ((), (2.0, 1.0), (1.0, 1.0)):
+        with pytest.raises(ValueError):
+            Histogram(bad)
+
+
+def test_histogram_empty_snapshot():
+    h = Histogram((1.0, 10.0))
+    snap = h.snapshot()
+    assert snap["count"] == 0
+    assert snap["mean"] is None and snap["min"] is None and snap["max"] is None
+    assert snap["p50"] is None and snap["p99"] is None
+    assert h.percentile(50) is None
+
+
+def test_histogram_exact_counts_and_bucketing():
+    h = Histogram((1.0, 10.0, 100.0))
+    for v in (0.5, 1.0, 5.0, 10.0, 99.0, 1000.0):
+        h.observe(v)
+    snap = h.snapshot()
+    # inclusive upper edges: 1.0 -> first bucket, 10.0 -> second
+    assert snap["counts"] == [2, 2, 1, 1]
+    assert snap["count"] == 6
+    assert snap["sum"] == pytest.approx(1115.5)
+    assert snap["min"] == 0.5 and snap["max"] == 1000.0
+
+
+def _numpy_bucket(bounds, value):
+    return bisect.bisect_left(bounds, value)
+
+
+def _check_percentile_matches_numpy(samples, q):
+    """`Histogram.percentile(q)` must land in the bucket that holds
+    numpy's exact ``inverted_cdf`` answer — same rank definition, error
+    bounded by bucket resolution."""
+    h = Histogram(LATENCY_BOUNDS_MS)
+    for v in samples:
+        h.observe(v)
+    got = h.percentile(q)
+    exact = float(np.percentile(samples, q, method="inverted_cdf"))
+    assert got is not None
+    assert _numpy_bucket(h.bounds, got) == _numpy_bucket(h.bounds, exact)
+    # and the interpolated value stays inside that bucket's closed range
+    i = _numpy_bucket(h.bounds, exact)
+    lo = h.bounds[i - 1] if i > 0 else min(samples)
+    hi = h.bounds[i] if i < len(h.bounds) else max(samples)
+    assert min(lo, min(samples)) <= got <= hi
+
+
+if given is not None:
+
+    @given(
+        samples=st.lists(
+            st.floats(0.01, 70000.0, allow_nan=False, allow_infinity=False),
+            min_size=1, max_size=200,
+        ),
+        q=st.sampled_from([1, 25, 50, 75, 90, 99, 100]),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_histogram_percentile_matches_numpy(samples, q):
+        _check_percentile_matches_numpy(samples, q)
+
+else:
+
+    @pytest.mark.parametrize("seed,n,q", [
+        (0, 1, 50), (1, 7, 99), (2, 50, 1), (3, 200, 90),
+        (4, 1000, 50), (5, 33, 100), (6, 99, 75),
+    ])
+    def test_histogram_percentile_matches_numpy(seed, n, q):
+        rng = np.random.default_rng(seed)
+        # log-uniform spread across every bucket plus both overflow sides
+        samples = list(np.exp(rng.uniform(np.log(0.01), np.log(70000.0), n)))
+        _check_percentile_matches_numpy(samples, q)
+
+
+def test_histogram_threaded_writers_exact_counts():
+    """No lost increments: N threads x M observes leave exactly N*M
+    counted, bucket counts summing to the total, and the running sum
+    matching the written values."""
+    h = Histogram(LATENCY_BOUNDS_MS)
+    n_threads, per_thread = 8, 500
+    values = [float(1 + (i % 97)) for i in range(per_thread)]
+
+    def writer():
+        for v in values:
+            h.observe(v)
+
+    threads = [threading.Thread(target=writer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = h.snapshot()
+    assert snap["count"] == n_threads * per_thread
+    assert sum(snap["counts"]) == n_threads * per_thread
+    assert snap["sum"] == pytest.approx(n_threads * sum(values))
+
+
+def test_histogram_snapshot_consistent_under_concurrent_writes():
+    """The seqlock read: snapshots taken *while* writers run must never
+    be torn — bucket counts always sum to the sample count, the mean
+    always lies within [min, max]."""
+    h = Histogram((1.0, 2.0, 4.0, 8.0))
+    stop = threading.Event()
+    bad = []
+
+    def reader():
+        while not stop.is_set():
+            s = h.snapshot()
+            if s["count"] != sum(s["counts"]):
+                bad.append(("torn counts", s))
+            if s["count"] and not (s["min"] <= s["mean"] <= s["max"]):
+                bad.append(("impossible mean", s))
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in readers:
+        t.start()
+    for i in range(20000):
+        h.observe(float(i % 10))
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not bad
+    assert h.count == 20000
+
+
+def test_telemetry_bundle_snapshot_keys():
+    t = Telemetry(clock=FakeClock())
+    t.queue_wait_ms.observe(3.0)
+    snap = t.snapshot()
+    assert set(snap) == {"queue_wait_ms", "service_ms", "queue_depth",
+                         "batch_jobs"}
+    assert snap["queue_wait_ms"]["count"] == 1
+    assert snap["service_ms"]["count"] == 0
+
+
+# ---------------------------------------------------------- structured logs
+
+def test_correlation_ids_are_short_and_unique():
+    ids = {new_correlation_id() for _ in range(256)}
+    assert len(ids) == 256
+    assert all(len(i) == 12 for i in ids)
+
+
+def test_log_event_emits_json_objects(caplog):
+    import json
+
+    with caplog.at_level(logging.DEBUG, logger="repro.serving"):
+        log_event("unit.test", job_id=7, correlation_id="abc123",
+                  weird=object())
+    payloads = [json.loads(r.message) for r in caplog.records]
+    assert {"event": "unit.test", "job_id": 7} == {
+        k: payloads[0][k] for k in ("event", "job_id")
+    }
+    assert payloads[0]["correlation_id"] == "abc123"  # default=str survived
+
+
+# ---------------------------------------------------------- circuit breaker
+
+def test_breaker_state_machine():
+    clock = FakeClock()
+    br = CircuitBreaker("m", failure_threshold=3, reset_after_s=10.0,
+                        clock=clock)
+    assert br.state == CLOSED and br.allow()
+    br.record_failure()
+    br.record_failure()
+    assert br.state == CLOSED and br.allow()  # below threshold
+    br.record_success()
+    br.record_failure()
+    br.record_failure()
+    assert br.state == CLOSED  # success reset the consecutive count
+    br.record_failure()
+    assert br.state == OPEN  # third consecutive
+    assert not br.allow()
+    clock.advance(9.9)
+    assert not br.allow()  # cooldown not elapsed
+    clock.advance(0.2)
+    assert br.allow()  # the half-open probe slot
+    assert br.state == HALF_OPEN
+    assert not br.allow()  # one probe at a time
+    br.record_success()
+    assert br.state == CLOSED and br.allow()
+    snap = br.snapshot()
+    assert snap["total_failures"] == 5 and snap["times_opened"] == 1
+
+
+def test_breaker_half_open_failure_reopens():
+    clock = FakeClock()
+    br = CircuitBreaker(failure_threshold=1, reset_after_s=5.0, clock=clock)
+    br.record_failure()
+    assert br.state == OPEN
+    clock.advance(5.1)
+    assert br.allow()
+    br.record_failure()  # the probe failed
+    assert br.state == OPEN and not br.allow()
+    assert br.snapshot()["times_opened"] == 2
+
+
+def test_breaker_stale_probe_self_heals():
+    """A probe whose submitter never reports back must not wedge the
+    breaker half-open forever: after another cooldown a new probe runs."""
+    clock = FakeClock()
+    br = CircuitBreaker(failure_threshold=1, reset_after_s=5.0, clock=clock)
+    br.record_failure()
+    clock.advance(5.1)
+    assert br.allow()  # probe granted, then its client dies silently
+    assert not br.allow()
+    clock.advance(5.1)
+    assert br.allow()  # stale probe released
+    br.record_success()
+    assert br.state == CLOSED
+
+
+# ------------------------------------------------- breaker x service (e2e)
+
+CFG = SimConfig(ctx_len=8)
+
+
+def _failing_engine(engine, monkeypatch):
+    def boom(*a, **k):
+        raise RuntimeError("bad artifact")
+
+    monkeypatch.setattr(engine, "simulate_many", boom)
+
+
+def test_open_breaker_rejects_at_submit_without_touching_drain_loop(monkeypatch):
+    """The acceptance bullet, as a failing-before regression: a model
+    that failed ``breaker_threshold`` consecutive batches is rejected at
+    ``submit`` — nothing enqueued, the scheduler never woken — while the
+    other resident keeps serving; after the cooldown one probe batch
+    closes the breaker again."""
+    clock = FakeClock()
+    serve = SimServe(cache=CompileCache(), clock=clock, breaker_threshold=2,
+                     breaker_reset_s=30.0)
+    for mid in ("alpha", "beta"):
+        serve.register(mid, sim_cfg=CFG)
+    arrs = synth_arrays(48, 0)
+    real_simulate_many = serve.registry.get("alpha").simulate_many
+    _failing_engine(serve.registry.get("alpha"), monkeypatch)
+
+    for _ in range(2):  # two consecutive batch failures trip the breaker
+        serve.submit(arrs, "alpha", n_lanes=2)
+        with pytest.raises(RuntimeError, match="bad artifact"):
+            serve.drain()
+    assert serve.stats()["breakers"]["alpha"]["state"] == "open"
+
+    serve._wake.clear()
+    with pytest.raises(ModelUnavailable, match="circuit breaker"):
+        serve.submit(arrs, "alpha", n_lanes=2)
+    # fast-fail at admission: nothing enqueued, the drain loop not woken
+    assert not serve._wake.is_set()
+    stats = serve.stats()
+    assert stats["jobs_pending"] == 0
+    assert stats["jobs_breaker_rejected"] == 1
+
+    # the rest of the zoo keeps serving through the open breaker
+    h = serve.submit(arrs, "beta", n_lanes=2)
+    serve.drain()
+    assert h.result().total_cycles > 0
+    assert serve.stats()["breakers"]["beta"]["state"] == "closed"
+
+    # cooldown -> one probe batch -> closed again
+    clock.advance(30.1)
+    monkeypatch.setattr(serve.registry.get("alpha"), "simulate_many",
+                        real_simulate_many)
+    h = serve.submit(arrs, "alpha", n_lanes=2)  # the half-open probe
+    serve.drain()
+    assert h.result().total_cycles > 0
+    assert serve.stats()["breakers"]["alpha"]["state"] == "closed"
+
+
+def test_invalid_request_does_not_consume_half_open_probe():
+    """The probe slot is for a real batch: a statically invalid submit
+    (bad n_lanes) fails before the breaker check, so the one half-open
+    probe is still available to a valid job."""
+    clock = FakeClock()
+    serve = SimServe(cache=CompileCache(), clock=clock, breaker_threshold=1,
+                     breaker_reset_s=5.0)
+    serve.register("alpha", sim_cfg=CFG)
+    serve.registry.breaker("alpha").record_failure()  # open
+    clock.advance(5.1)
+    arrs = synth_arrays(48, 1)
+    with pytest.raises(ValueError, match="n_lanes"):
+        serve.submit(arrs, "alpha", n_lanes=0)
+    # the probe slot survived the invalid request
+    h = serve.submit(arrs, "alpha", n_lanes=2)
+    serve.drain()
+    assert h.result().total_cycles > 0
+    assert serve.stats()["breakers"]["alpha"]["state"] == "closed"
+
+
+def test_evicting_model_resets_breaker():
+    serve = SimServe(cache=CompileCache(), breaker_threshold=1)
+    serve.register("alpha", sim_cfg=CFG)
+    serve.registry.breaker("alpha").record_failure()
+    assert serve.registry.breaker("alpha").state == "open"
+    serve.registry.remove("alpha")
+    serve.register("alpha", sim_cfg=CFG)  # re-registered: clean slate
+    assert serve.registry.breaker("alpha").state == CLOSED
+
+
+# ----------------------------------------------------- session passthrough
+
+def test_simnet_stats_passthrough():
+    from repro.core.session import SimNet
+
+    with SimNet(cache=CompileCache()) as sn:
+        sn.simulate_many([synth_arrays(48, 2)], n_lanes=2)
+        stats = sn.stats()
+    assert stats["jobs_completed"] == 1
+    assert stats["telemetry"]["service_ms"]["count"] == 1
+    assert sn.model_id in stats["breakers"]
+    assert stats["breakers"][sn.model_id]["state"] == CLOSED
