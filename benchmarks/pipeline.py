@@ -512,6 +512,80 @@ def step_throughput(data, quick):
               f"{http_wall:.1f}s, p99 service {sh['service_ms_p99']:.0f} ms, "
               f"totals_match={sh['totals_match']}", flush=True)
 
+        # --- serve_fleet: the same grid through replica SUBPROCESSES -----
+        # 1-replica vs 2-replica lanes behind the router (each replica is a
+        # real `repro serve --http 0` process with its own interpreter and
+        # cold compile cache — wall clock includes fleet startup, the price
+        # of process isolation), then a failover lane: one replica is
+        # SIGKILLed mid-run and every accepted job must still complete on
+        # the survivor via the router's resubmit policy. Totals must stay
+        # bit-identical to the in-process sequential baseline in all lanes.
+        from repro.serving.fleet import Fleet
+        from repro.serving.router import route_jobs
+
+        models_spec = {mid: str(ART / "models" / mid) for mid in async_models}
+        payloads = [{"id": f"fleet-{c}", "trace": wire[tr.name], "model": mid,
+                     "lanes": lanes} for c, (mid, tr) in enumerate(grid)]
+
+        def fleet_totals(entries):
+            return {(mid, tr.name): e["result"]["total_cycles"]
+                    for (mid, tr), e in zip(grid, entries)
+                    if e["status"] == "done"}
+
+        out["serve_fleet"] = {"models": async_models, "n_jobs": len(grid)}
+        for n_rep in (1, 2):
+            t0 = time.time()
+            with Fleet(n_rep, models=models_spec, max_wait_ms=10.0) as fleet:
+                entries = route_jobs(fleet.url, payloads, timeout=600)
+                fst = fleet.stats()
+            wall = time.time() - t0
+            out["serve_fleet"][f"replicas_{n_rep}"] = {
+                "wall_seconds": wall,
+                "totals_match": fleet_totals(entries) == seq_totals,
+                "jobs_per_batch": fst["fleet"]["jobs_per_batch"],
+                "routed_per_replica": fst["router"]["routed_per_replica"],
+                "failovers": fst["router"]["failovers"],
+                "service_ms_p99": fst["telemetry"]["service_ms"]["p99"],
+            }
+
+        # failover drill: kill r0 once half the grid is accepted; the
+        # router ejects it and route_jobs resubmits its lost jobs to r1
+        t0 = time.time()
+        with Fleet(2, models=models_spec, max_wait_ms=200.0) as fleet:
+            drill = {}
+
+            def drive():
+                drill["entries"] = route_jobs(fleet.url, payloads, timeout=600)
+
+            th = threading.Thread(target=drive)
+            th.start()
+            want = max(1, len(grid) // 2)
+            while fleet.router.stats(refresh=False)["router"]["jobs_routed"] < want:
+                time.sleep(0.01)
+            fleet.kill_replica(0)
+            th.join()
+            fst = fleet.stats()
+        wall = time.time() - t0
+        entries = drill["entries"]
+        out["serve_fleet"]["failover"] = {
+            "wall_seconds": wall,
+            "completed": sum(e["status"] == "done" for e in entries),
+            "totals_match": fleet_totals(entries) == seq_totals,
+            "resubmits": sum(e["resubmits"] for e in entries),
+            "ejections": fst["router"]["ejections"],
+            "survivor_routed": fst["router"]["routed_per_replica"],
+        }
+        sf = out["serve_fleet"]
+        print(f"[pipeline] serve_fleet: {len(grid)} jobs — 1 replica "
+              f"{sf['replicas_1']['wall_seconds']:.1f}s, 2 replicas "
+              f"{sf['replicas_2']['wall_seconds']:.1f}s, failover drill "
+              f"{sf['failover']['completed']}/{len(grid)} done with "
+              f"{sf['failover']['resubmits']} resubmits after "
+              f"{sf['failover']['ejections']} ejection(s); totals_match="
+              f"{sf['replicas_1']['totals_match']}/"
+              f"{sf['replicas_2']['totals_match']}/"
+              f"{sf['failover']['totals_match']}", flush=True)
+
     # --- step_layout: ring vs roll simulator state layouts ---------------
     # Steady-state packed step throughput (timeit re-stream of a device-
     # staged pack) at ctx_len 64. Teacher-forced rows isolate the pure

@@ -191,6 +191,32 @@ def throughput():
         CSV_ROWS.append(("serve_http/jobs_per_batch", 0.0, sh["jobs_per_batch"]))
         CSV_ROWS.append(("serve_http/service_ms_p99", 0.0, sh["service_ms_p99"]))
         CSV_ROWS.append(("serve_http/totals_match", 0.0, float(sh["totals_match"])))
+    sf = data.get("serve_fleet")
+    if sf:
+        print(f"  SimServe fleet: {sf['n_jobs']} jobs through the router "
+              f"over replica subprocesses ({len(sf['models'])} models)")
+        for lane in ("replicas_1", "replicas_2"):
+            r = sf.get(lane)
+            if not r:
+                continue
+            print(f"    {lane:14s} {r['wall_seconds']:6.1f}s wall "
+                  f"(startup + cold per-replica compiles), "
+                  f"{r['jobs_per_batch']:.1f} jobs/batch, totals "
+                  f"{'bit-identical' if r['totals_match'] else 'MISMATCH'}")
+            CSV_ROWS.append((f"serve_fleet/{lane}_wall_s", 0.0,
+                             r["wall_seconds"]))
+            CSV_ROWS.append((f"serve_fleet/{lane}_totals_match", 0.0,
+                             float(r["totals_match"])))
+        fo = sf.get("failover")
+        if fo:
+            print(f"    failover drill: {fo['completed']}/{sf['n_jobs']} done "
+                  f"after killing a replica mid-run — {fo['resubmits']} "
+                  f"resubmit(s), {fo['ejections']} ejection(s), totals "
+                  f"{'bit-identical' if fo['totals_match'] else 'MISMATCH'}")
+            CSV_ROWS.append(("serve_fleet/failover_completed", 0.0,
+                             fo["completed"]))
+            CSV_ROWS.append(("serve_fleet/failover_totals_match", 0.0,
+                             float(fo["totals_match"])))
     lay = data.get("step_layout")
     if lay:
         print(f"  step layouts (ring vs roll state traffic, ctx_len "

@@ -14,7 +14,12 @@ compose with jq / CI checks.
             resident models), continuously pack the jobs into shared lane
             batches per model, emit per-job results + service/cache stats;
             --async runs the background drain loop (--max-wait-ms batch
-            window, --max-queue-depth admission control)
+            window, --max-queue-depth admission control); --http PORT with
+            no --jobs runs a STANDING replica server (prints one
+            {"event": "listening", "port": N} line, serves until
+            SIGTERM/SIGINT — what `repro fleet` spawns N of)
+  fleet     spawn N replica subprocesses + the router tier over them,
+            round-trip a job file through the router as a real client
   bench     packed-vs-sequential engine microbenchmark
 
 Train once, simulate anywhere:
@@ -182,20 +187,43 @@ def cmd_serve(args) -> int:
     ``/v1/jobs`` as a real network client, results are polled from
     ``/v1/jobs/<id>`` and stats from ``/v1/stats`` — the CI smoke for
     the wire path. ``--priority`` / ``--deadline-ms`` set per-job QoS
-    defaults (a job file entry's own "priority"/"deadline_ms" wins)."""
-    spec = json.loads(Path(args.jobs).read_text())
+    defaults (a job file entry's own "priority"/"deadline_ms" wins).
+
+    With ``--http PORT`` and NO ``--jobs`` this becomes a standing
+    replica server: bind, print the listening line, serve until
+    SIGTERM/SIGINT — the mode `repro fleet` spawns N of. ``--model
+    ID=PATH`` makes artifacts resident (teacher-forced replay is always
+    available)."""
+    from repro.serving.backoff import Backoff
+
+    spec = json.loads(Path(args.jobs).read_text()) if args.jobs else {}
     serve = SimServe(
         chunk=args.chunk,
         max_queue_depth=args.max_queue_depth,
         max_wait_ms=args.max_wait_ms,
     )
-    for mid, path in (spec.get("models") or {}).items():
+    models = dict(spec.get("models") or {})
+    for entry in args.model or []:
+        mid, sep, path = entry.partition("=")
+        if not sep or not mid or not path:
+            print(f"--model wants ID=ARTIFACT_DIR, got {entry!r}",
+                  file=sys.stderr)
+            return 2
+        models[mid] = path
+    for mid, path in models.items():
         serve.register(mid, path)
+    if args.jobs is None:
+        if args.http is None:
+            print("serve needs --jobs (batch mode) or --http "
+                  "(standing server)", file=sys.stderr)
+            return 2
+        return _serve_listen(args, serve)
     if args.http is not None:
         return _serve_http(args, spec, serve)
     if args.async_:
         serve.start()
     handles = []
+    backoff = Backoff(0.005, 0.25)  # QueueFull retry pacing (async mode)
     trace_memo = {}  # jobs repeating a (bench, n, o3) cell share one DES run
     for i, job in enumerate(spec.get("jobs", [])):
         bench = job.get("bench") or (args.bench[0] if args.bench else "sim_loop")
@@ -213,13 +241,15 @@ def cmd_serve(args) -> int:
                     priority=int(job.get("priority", args.priority)),
                     deadline_ms=job.get("deadline_ms", args.deadline_ms),
                 )
+                backoff.reset()  # admitted — the next wait starts snappy
                 break
             except QueueFull:
                 # the documented client response to backpressure: let the
-                # queue shrink, then retry (async: the loop is draining;
-                # sync: drain here — nothing else will)
+                # queue shrink, then retry (async: the loop is draining,
+                # wait with capped exponential backoff; sync: drain here —
+                # nothing else will)
                 if args.async_:
-                    time.sleep(0.01)
+                    backoff.sleep()
                 else:
                     serve.drain()
         handles.append((job.get("id") or f"job{i}", job.get("model"), h))
@@ -241,9 +271,58 @@ def cmd_serve(args) -> int:
     return 0
 
 
+def _job_payloads(spec, args) -> list:
+    """The job file's entries as wire payloads (bench specs — the server
+    side runs/caches the DES trace), CLI defaults applied."""
+    payloads = []
+    for i, job in enumerate(spec.get("jobs", [])):
+        payload = {
+            "id": job.get("id") or f"job{i}",
+            "model": job.get("model"),
+            "bench": job.get("bench") or (args.bench[0] if args.bench
+                                          else "sim_loop"),
+            "n": int(job.get("n", args.n)),
+            "o3": job.get("o3", args.o3),
+            "lanes": int(job.get("lanes", args.lanes)),
+            "priority": int(job.get("priority", args.priority)),
+        }
+        deadline = job.get("deadline_ms", args.deadline_ms)
+        if deadline is not None:
+            payload["deadline_ms"] = float(deadline)
+        payloads.append(payload)
+    return payloads
+
+
+def _serve_listen(args, serve: SimServe) -> int:
+    """The standing replica server: bind, announce the port on stdout as
+    one JSON line (the fleet manager reads it to collect ephemeral
+    ports), serve until SIGTERM/SIGINT, exit with the final stats."""
+    import os
+    import signal
+    import threading
+
+    from repro.serving.http import SimServeHTTP
+
+    front = SimServeHTTP(serve, port=args.http, cache_dir=args.cache_dir)
+    port = front.start()
+    # ONE compact line: the fleet manager line-parses stdout for this
+    print(json.dumps({"event": "listening", "port": port, "url": front.url,
+                      "pid": os.getpid(),
+                      "models": sorted(serve.registry.ids())}),
+          flush=True)
+    stop = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: stop.set())
+    stop.wait()
+    front.stop(stop_service=True)
+    _emit({"event": "stopped", "port": port, "stats": serve.stats()})
+    return 0
+
+
 def _serve_http(args, spec, serve: SimServe) -> int:
     """The ``--http`` round trip: bind the front-end, act as a real HTTP
     client against it (POST every job, poll every result), emit JSON."""
+    from repro.serving.backoff import Backoff
     from repro.serving.http import SimServeHTTP, http_request, wait_job
 
     front = SimServeHTTP(serve, port=args.http, cache_dir=args.cache_dir)
@@ -251,30 +330,19 @@ def _serve_http(args, spec, serve: SimServe) -> int:
     base = front.url
     try:
         posted = []
-        for i, job in enumerate(spec.get("jobs", [])):
-            payload = {
-                "id": job.get("id") or f"job{i}",
-                "model": job.get("model"),
-                "bench": job.get("bench") or (args.bench[0] if args.bench
-                                              else "sim_loop"),
-                "n": int(job.get("n", args.n)),
-                "o3": job.get("o3", args.o3),
-                "lanes": int(job.get("lanes", args.lanes)),
-                "priority": int(job.get("priority", args.priority)),
-            }
-            deadline = job.get("deadline_ms", args.deadline_ms)
-            if deadline is not None:
-                payload["deadline_ms"] = float(deadline)
+        backoff = Backoff(0.005, 0.25)
+        for payload in _job_payloads(spec, args):
             while True:
                 status, body = http_request(f"{base}/v1/jobs", "POST", payload)
                 if status != 429:  # queue-full backpressure: wait and retry
+                    backoff.reset()
                     break
-                time.sleep(0.02)
+                backoff.sleep()
             if status != 202:
                 print(f"submit {payload['id']!r} failed: {status} {body}",
                       file=sys.stderr)
                 return 1
-            posted.append((payload["id"], job.get("model"), body["job_id"]))
+            posted.append((payload["id"], payload.get("model"), body["job_id"]))
         jobs_out = []
         failed = 0
         for jid, mid, job_id in posted:
@@ -295,6 +363,53 @@ def _serve_http(args, spec, serve: SimServe) -> int:
         "port": port,
         "healthz": health,
         "jobs": jobs_out,
+        "stats": stats,
+    })
+    return 1 if failed else 0
+
+
+def cmd_fleet(args) -> int:
+    """Fleet mode: spawn ``--replicas`` SimServe subprocesses (each a
+    standing ``repro serve --http 0`` with the job file's models
+    resident), start the router tier over their collected ports, then
+    act as a real HTTP client against the ROUTER — POST every job
+    (model-aware p2c placement, failover), poll every result (resubmit
+    on a lost replica), and emit per-job results plus the aggregated
+    fleet stats. ``--quick`` shrinks the per-job instruction counts to
+    CI-smoke size."""
+    from repro.serving.fleet import Fleet
+    from repro.serving.http import http_request
+    from repro.serving.router import route_jobs
+
+    spec = json.loads(Path(args.jobs).read_text())
+    if args.quick:
+        args.n = min(args.n, 2000)
+        for job in spec.get("jobs", []):
+            if "n" in job:
+                job["n"] = min(int(job["n"]), 2000)
+    fleet = Fleet(
+        args.replicas,
+        models=spec.get("models"),
+        router_port=args.http,
+        max_queue_depth=args.max_queue_depth,
+        max_wait_ms=args.max_wait_ms,
+        chunk=args.chunk,
+        cache_dir=args.cache_dir,
+        startup_timeout_s=args.startup_timeout,
+    )
+    with fleet:
+        port = fleet.router.port
+        entries = route_jobs(fleet.url, _job_payloads(spec, args),
+                             timeout=args.timeout)
+        _, health = http_request(f"{fleet.url}/v1/healthz")
+        stats = fleet.stats()
+    failed = sum(e["status"] != "done" for e in entries)
+    _emit({
+        "mode": "fleet",
+        "replicas": len(fleet.replicas),
+        "port": port,
+        "healthz": health,
+        "jobs": entries,
         "stats": stats,
     })
     return 1 if failed else 0
@@ -409,9 +524,14 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("serve", help="batch-mode SimServe over a JSON job file")
     _common(p)
-    p.add_argument("--jobs", required=True,
+    p.add_argument("--jobs", default=None,
                    help='JSON job file: {"models": {id: artifact_dir}, '
-                        '"jobs": [{"id", "model", "bench", "n", "lanes", "o3"}]}')
+                        '"jobs": [{"id", "model", "bench", "n", "lanes", "o3"}]}'
+                        " — omit it (with --http) for a standing server")
+    p.add_argument("--model", action="append", metavar="ID=ARTIFACT_DIR",
+                   help="make an artifact resident (repeatable; adds to the "
+                        'job file\'s "models" map — the way `repro fleet` '
+                        "hands each replica subprocess its zoo)")
     p.add_argument("--chunk", type=int, default=1024,
                    help="streaming chunk cap (bucketed per batch)")
     p.add_argument("--async", dest="async_", action="store_true",
@@ -439,6 +559,34 @@ def build_parser() -> argparse.ArgumentParser:
                         "many ms after submit fail loudly before dispatch "
                         '(a job file entry\'s own "deadline_ms" wins)')
     p.set_defaults(fn=cmd_serve)
+
+    p = sub.add_parser(
+        "fleet",
+        help="N replica subprocesses + the router tier over a JSON job file",
+    )
+    _common(p)
+    p.add_argument("--jobs", required=True,
+                   help="JSON job file (same shape as `serve`); jobs are "
+                        "POSTed through the router as a real HTTP client")
+    p.add_argument("--replicas", type=int, default=2,
+                   help="SimServe replica subprocesses to spawn")
+    p.add_argument("--http", type=int, default=0, metavar="PORT",
+                   help="router port (0 = ephemeral; replicas always bind "
+                        "ephemeral ports)")
+    p.add_argument("--chunk", type=int, default=1024)
+    p.add_argument("--max-queue-depth", type=int, default=0,
+                   help="per-replica admission bound (QueueFull past it; "
+                        "the router fails a full replica over to the next "
+                        "candidate)")
+    p.add_argument("--max-wait-ms", type=float, default=5.0,
+                   help="per-replica async batch window")
+    p.add_argument("--priority", type=int, default=0)
+    p.add_argument("--deadline-ms", type=float, default=None)
+    p.add_argument("--timeout", type=float, default=600.0,
+                   help="overall client budget for submitting + polling")
+    p.add_argument("--startup-timeout", type=float, default=180.0,
+                   help="per-replica limit to announce its port")
+    p.set_defaults(fn=cmd_fleet)
 
     p = sub.add_parser("bench", help="packed vs sequential throughput microbench")
     _common(p, n_default=6000)

@@ -26,6 +26,12 @@ Endpoints (all JSON):
   histograms and breaker states included.
 - ``GET /v1/healthz``      — 200 while the drain loop is running, 503
   once ``stop()`` flips it (load balancers eject the instance).
+- ``GET /v1/models``       — the resident model ids, ``{"models": [...]}``
+  (the fleet router discovers per-replica placement through this).
+
+A handle evicted from the bounded tracking map answers 410 (error type
+``"evicted"``) — distinct from 404 for an id this front-end never issued,
+so a client that polled too late can tell "gone" from "never existed".
 
 No new dependencies: ``http.server`` + ``json`` + ``urllib`` only.
 
@@ -50,6 +56,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.backoff import Backoff
 from repro.serving.service import (
     DeadlineExceeded,
     JobHandle,
@@ -70,6 +77,23 @@ class ApiError(Exception):
 
     def body(self) -> Dict[str, Any]:
         return {"error": {"type": self.err_type, "message": str(self)}}
+
+
+class TransportError(RuntimeError):
+    """The request never produced an HTTP response: connection refused,
+    reset mid-read, timeout, DNS failure.
+
+    Distinct from an HTTP error *status* (those return normally with the
+    structured body — the server answered). The router's failover logic
+    branches on exactly this: a `TransportError` means the replica is
+    unreachable (eject it, try another), while a 4xx/5xx body is the
+    replica speaking policy. Callers that used to leak raw ``URLError``
+    internals now get one typed, catchable failure."""
+
+    def __init__(self, url: str, cause: BaseException):
+        super().__init__(f"{url}: {cause!r}")
+        self.url = url
+        self.cause = cause
 
 
 def _trace_from_wire(spec) -> Dict[str, np.ndarray]:
@@ -127,6 +151,13 @@ class SimServeHTTP:
         self._handles: "collections.OrderedDict[int, JobHandle]" = (
             collections.OrderedDict()
         )
+        # ids evicted from the bounded map, so GET can answer 410 "evicted"
+        # instead of a (wrong) 404 "never existed"; itself bounded — ints
+        # are cheap, so the memory of evictions outlives the handles 16×
+        self._evicted: "collections.deque[int]" = collections.deque(
+            maxlen=max(16 * self.max_tracked_jobs, 1)
+        )
+        self._evicted_set: set = set()
         self._hlock = threading.Lock()
         self._traces: Dict[Tuple, Any] = {}  # (bench, n, o3) -> arrays
         self._tlock = threading.Lock()
@@ -234,13 +265,25 @@ class SimServeHTTP:
         with self._hlock:
             self._handles[h.job_id] = h
             while len(self._handles) > self.max_tracked_jobs:
-                self._handles.popitem(last=False)
+                old_id, _ = self._handles.popitem(last=False)
+                if len(self._evicted) == self._evicted.maxlen:
+                    self._evicted_set.discard(self._evicted[0])
+                self._evicted.append(old_id)
+                self._evicted_set.add(old_id)
         return {"job_id": h.job_id, "status": "pending",
                 "model": h.model_id, "correlation_id": h.correlation_id}
 
     def job_status(self, job_id: int) -> Dict[str, Any]:
         with self._hlock:
             h = self._handles.get(job_id)
+            evicted = h is None and job_id in self._evicted_set
+        if evicted:
+            raise ApiError(
+                410, "evicted",
+                f"job {job_id} was tracked but evicted from the bounded "
+                f"handle map (max_tracked_jobs={self.max_tracked_jobs}); "
+                "its result is gone from this front-end — resubmit"
+            )
         if h is None:
             raise ApiError(404, "unknown_job",
                            f"no tracked job {job_id} on this front-end")
@@ -262,7 +305,13 @@ class SimServeHTTP:
         return out
 
 
-class _Handler(BaseHTTPRequestHandler):
+class JsonHandler(BaseHTTPRequestHandler):
+    """Shared request plumbing for every serving-tier HTTP surface (the
+    replica front-end here, the fleet router in `repro.serving.router`):
+    structured JSON in, structured JSON out, `ApiError` → its status +
+    body, anything else → a 500 with a structured body — a silent hangup
+    would strand the client."""
+
     server_version = "SimServe/1"
     protocol_version = "HTTP/1.1"
 
@@ -279,8 +328,6 @@ class _Handler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def _dispatch(self, fn) -> None:
-        # every outcome — including a handler bug — answers with a
-        # structured JSON body; a silent hangup would strand the client
         try:
             status, obj = fn()
             self._send(status, obj)
@@ -293,22 +340,30 @@ class _Handler(BaseHTTPRequestHandler):
                       error=repr(e))
             self._send(500, {"error": {"type": "internal", "message": repr(e)}})
 
+    def read_json_body(self) -> Dict[str, Any]:
+        """The request body as a JSON object (400 on anything else). The
+        raw bytes stay on ``self.raw_body`` so a proxying handler can
+        forward them without re-encoding."""
+        length = int(self.headers.get("Content-Length") or 0)
+        raw = self.raw_body = self.rfile.read(length)
+        try:
+            payload = json.loads(raw if raw else b"")
+        except (json.JSONDecodeError, UnicodeDecodeError, ValueError) as e:
+            raise ApiError(400, "malformed_json", str(e)) from None
+        if not isinstance(payload, dict):
+            raise ApiError(400, "malformed_json",
+                           "the job body must be a JSON object")
+        return payload
+
+
+class _Handler(JsonHandler):
     def do_POST(self):
         fe = self.server.frontend
 
         def handle():
             if self.path.rstrip("/") != "/v1/jobs":
                 raise ApiError(404, "not_found", f"no route POST {self.path!r}")
-            length = int(self.headers.get("Content-Length") or 0)
-            raw = self.rfile.read(length)
-            try:
-                payload = json.loads(raw if raw else b"")
-            except (json.JSONDecodeError, UnicodeDecodeError, ValueError) as e:
-                raise ApiError(400, "malformed_json", str(e)) from None
-            if not isinstance(payload, dict):
-                raise ApiError(400, "malformed_json",
-                               "the job body must be a JSON object")
-            return 202, fe.submit_job(payload)
+            return 202, fe.submit_job(self.read_json_body())
 
         self._dispatch(handle)
 
@@ -326,6 +381,10 @@ class _Handler(BaseHTTPRequestHandler):
                 }
             if path == "/v1/stats":
                 return 200, fe.service.stats()
+            if path == "/v1/models":
+                # the router's discovery endpoint: which residents can this
+                # replica serve (placement is model-aware)
+                return 200, {"models": sorted(fe.service.registry.ids())}
             if path.startswith("/v1/jobs/"):
                 tail = path.rsplit("/", 1)[1]
                 try:
@@ -343,13 +402,25 @@ class _Handler(BaseHTTPRequestHandler):
 # -------------------------------------------------------------- thin client
 
 def http_request(url: str, method: str = "GET", payload=None,
-                 timeout: float = 60.0) -> Tuple[int, Dict[str, Any]]:
+                 timeout: float = 60.0, *,
+                 data: Optional[bytes] = None) -> Tuple[int, Dict[str, Any]]:
     """One JSON request; returns (status, body) and never raises on HTTP
-    error statuses — the structured error body is the point."""
+    error statuses — the structured error body is the point.
+
+    Transport-level failures (connection refused, reset mid-read,
+    timeout) raise `TransportError` instead of leaking raw ``URLError``
+    internals: the server never answered, so there is no status to
+    return — and the router's failover branches on exactly this type.
+
+    ``data`` sends pre-encoded body bytes verbatim (the router forwards
+    client payloads without a decode → re-encode round trip); it is
+    mutually exclusive with ``payload``."""
+    import http.client
     import urllib.error
     import urllib.request
 
-    data = None if payload is None else json.dumps(payload, default=float).encode()
+    if data is None and payload is not None:
+        data = json.dumps(payload, default=float).encode()
     req = urllib.request.Request(
         url, data=data, method=method,
         headers={"Content-Type": "application/json"},
@@ -360,12 +431,22 @@ def http_request(url: str, method: str = "GET", payload=None,
     except urllib.error.HTTPError as e:
         with e:
             return e.code, json.loads(e.read() or b"{}")
+    except (OSError, http.client.HTTPException) as e:
+        # URLError (itself an OSError), ConnectionError, socket.timeout,
+        # IncompleteRead/RemoteDisconnected: one typed failure
+        raise TransportError(url, e) from e
 
 
-def wait_job(base_url: str, job_id: int, *, timeout: float = 600.0,
-             poll_s: float = 0.02) -> Dict[str, Any]:
-    """Poll ``GET /v1/jobs/<id>`` until the job leaves "pending"."""
+def wait_job(base_url: str, job_id, *, timeout: float = 600.0,
+             poll_s: float = 0.005, poll_cap_s: float = 0.25) -> Dict[str, Any]:
+    """Poll ``GET /v1/jobs/<id>`` until the job leaves "pending".
+
+    Polls with capped exponential backoff (``poll_s`` doubling up to
+    ``poll_cap_s``): snappy for short jobs, bounded request rate for long
+    ones — at fleet scale, N clients × fixed-interval polls would hammer
+    the router."""
     deadline = time.monotonic() + timeout
+    backoff = Backoff(poll_s, max(poll_cap_s, poll_s))
     while True:
         status, body = http_request(f"{base_url}/v1/jobs/{job_id}")
         if status != 200:
@@ -374,4 +455,4 @@ def wait_job(base_url: str, job_id: int, *, timeout: float = 600.0,
             return body
         if time.monotonic() >= deadline:
             raise TimeoutError(f"job {job_id} still pending after {timeout}s")
-        time.sleep(poll_s)
+        backoff.sleep()

@@ -157,6 +157,33 @@ class Histogram:
         }
 
 
+def merge_snapshots(snaps: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Merge `Histogram.snapshot()` dicts from several services into one
+    fleet-wide snapshot (same shape, percentiles recomputed).
+
+    Fixed-bucket histograms merge exactly: per-bucket counts add, and the
+    inverted-CDF percentile walk over the summed counts lands in the same
+    bucket it would over the union of the raw samples — the property the
+    router's aggregated ``/v1/stats`` relies on. All snapshots must share
+    identical bounds (the serving tier's are module constants)."""
+    snaps = [s for s in snaps if s]
+    if not snaps:
+        return Histogram((1.0,)).snapshot()
+    bounds = tuple(snaps[0]["bounds"])
+    if any(tuple(s["bounds"]) != bounds for s in snaps):
+        raise ValueError("cannot merge histograms with differing bounds")
+    merged = Histogram(bounds)
+    merged._counts = [sum(s["counts"][i] for s in snaps)
+                      for i in range(len(bounds) + 1)]
+    merged._count = sum(s["count"] for s in snaps)
+    merged._sum = sum(s["sum"] for s in snaps)
+    nonempty = [s for s in snaps if s["count"]]
+    if nonempty:
+        merged._min = min(s["min"] for s in nonempty)
+        merged._max = max(s["max"] for s in nonempty)
+    return merged.snapshot()
+
+
 CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
 
 

@@ -1,0 +1,445 @@
+"""The fleet router over live in-process replicas: placement, failover,
+ejection/readmission, aggregated stats.
+
+Each "replica" here is a real `SimServeHTTP` front-end on its own
+ephemeral port (real sockets, real handler threads) — only the replica
+*process* boundary of `repro.serving.fleet` is elided, so the whole
+failure policy runs in the fast tier. The acceptance guards:
+
+- two replicas behind the router produce totals bit-identical to a
+  single in-process SimServe draining the same job set;
+- killing a replica with an accepted-but-unfinished job loses nothing —
+  the poll answers a structured 503 ``replica_unavailable`` and
+  `route_jobs` resubmits to the survivor (asserted via the router's
+  ``/v1/stats`` ejection/readmission counters);
+- a restarted replica (same port — the router's URLs are fixed) is
+  readmitted by the background prober.
+"""
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+from conftest import synth_arrays
+
+from repro.core.simulator import SimConfig
+from repro.serving.compile_cache import CompileCache
+from repro.serving.http import SimServeHTTP, http_request
+from repro.serving.router import FleetRouter, route_jobs
+from repro.serving.service import SimServe
+
+CFG = SimConfig(ctx_len=8)
+TRACES = {f"w{i}": synth_arrays(64 + 16 * i, i) for i in range(3)}
+MODELS = ("alpha", "beta")
+
+
+def _wire(arrs):
+    return {k: np.asarray(v).tolist() for k, v in arrs.items()}
+
+
+def _replica(models=MODELS, *, port=0, **serve_kw):
+    """One live replica: a started SimServe + bound HTTP front-end."""
+    serve_kw.setdefault("cache", CompileCache())
+    serve_kw.setdefault("max_wait_ms", 5.0)
+    serve = SimServe(**serve_kw)
+    for mid in models:
+        serve.register(mid, sim_cfg=CFG)
+    front = SimServeHTTP(serve, port=port)
+    front.start()
+    return serve, front
+
+
+def _router(fronts, **kw):
+    kw.setdefault("poll_interval_s", 0.05)
+    kw.setdefault("probe_initial_s", 0.02)
+    kw.setdefault("probe_cap_s", 0.2)
+    kw.setdefault("rng", random.Random(0))
+    r = FleetRouter([f.url for f in fronts], **kw)
+    r.start()
+    return r
+
+
+def _baseline(jobs):
+    """Sequential one-batch-per-job reference totals on a single SimServe."""
+    serve, _ = _make_single()
+    out = {}
+    for mid, name in jobs:
+        h = serve.submit(TRACES[name], mid, n_lanes=2)
+        serve.drain()
+        out[(mid, name)] = (h.result().total_cycles, h.result().overflow)
+    return out
+
+
+def _make_single():
+    serve = SimServe(cache=CompileCache())
+    for mid in MODELS:
+        serve.register(mid, sim_cfg=CFG)
+    return serve, None
+
+
+def _wait_until(pred, timeout=15.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.02)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+@pytest.fixture
+def pair():
+    """Two live replicas + a started router over them."""
+    s0, f0 = _replica()
+    s1, f1 = _replica()
+    router = _router([f0, f1])
+    yield (s0, f0), (s1, f1), router
+    router.stop()
+    for s, f in ((s0, f0), (s1, f1)):
+        f.stop(stop_service=True)
+
+
+# ------------------------------------------------------------ discovery
+
+def test_router_healthz_and_models(pair):
+    (_, f0), (_, f1), router = pair
+    st, body = http_request(f"{router.url}/v1/healthz")
+    assert st == 200 and body["ok"] is True
+    assert body["healthy_replicas"] == 2 and body["total_replicas"] == 2
+    assert body["replicas"] == {"r0": True, "r1": True}
+    st, body = http_request(f"{router.url}/v1/models")
+    assert st == 200
+    assert set(MODELS) <= set(body["models"])
+    assert set(body["replicas"]) == {"r0", "r1"}
+    for models in body["replicas"].values():
+        assert set(MODELS) <= set(models)
+
+
+# ---------------------------------------------------------- e2e identity
+
+def test_fleet_bit_identical_to_single_simserve(pair):
+    """The acceptance guard: the same job set through 2 replicas behind
+    the router yields totals bit-identical to one in-process SimServe."""
+    _, _, router = pair
+    jobs = [(mid, name) for mid in MODELS for name in TRACES]
+    baseline = _baseline(jobs)
+    payloads = [
+        {"id": f"{mid}-{name}", "trace": _wire(TRACES[name]), "model": mid,
+         "lanes": 2}
+        for mid, name in jobs
+    ]
+    entries = route_jobs(router.url, payloads, timeout=240)
+    assert [e["status"] for e in entries] == ["done"] * len(jobs)
+    for (mid, name), e in zip(jobs, entries):
+        got = (e["result"]["total_cycles"], e["result"]["overflow"])
+        assert got == baseline[(mid, name)], (mid, name, e["replica"])
+        assert e["job_id"].startswith(f'{e["replica"]}:')
+    st, stats = http_request(f"{router.url}/v1/stats")
+    assert st == 200
+    assert stats["router"]["jobs_routed"] == len(jobs)
+    assert sum(stats["router"]["routed_per_replica"].values()) == len(jobs)
+    assert stats["fleet"]["jobs_completed"] == len(jobs)
+    assert stats["fleet"]["loop_errors"] == 0
+    # merged fixed-bucket histograms count every job exactly once
+    assert stats["telemetry"]["service_ms"]["count"] == len(jobs)
+    assert sum(stats["telemetry"]["service_ms"]["counts"]) == len(jobs)
+
+
+def test_router_job_status_proxies_with_rewritten_id(pair):
+    _, _, router = pair
+    st, body = http_request(
+        f"{router.url}/v1/jobs", "POST",
+        {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+         "id": "proxied"},
+    )
+    assert st == 202
+    rid = body["job_id"]
+    name, _, local = rid.partition(":")
+    assert name == body["replica"] and local.isdigit()
+    _wait_until(
+        lambda: http_request(f"{router.url}/v1/jobs/{rid}")[1].get("status")
+        != "pending",
+        msg="proxied job terminal",
+    )
+    st, done = http_request(f"{router.url}/v1/jobs/{rid}")
+    assert st == 200 and done["status"] == "done"
+    assert done["job_id"] == rid and done["replica"] == name
+    assert done["result"]["name"] == "proxied"
+
+
+# ------------------------------------------------------------- placement
+
+def test_model_aware_placement_and_unknown_model(pair):
+    """Jobs only land on replicas hosting the model; a model nobody hosts
+    is a structured 404 with the fleet's resident set."""
+    (_, f0), (_, f1), _ = pair
+    # a second router with polls parked, so the test's hand-set model
+    # registry view isn't refreshed out from under the assertions
+    slow = FleetRouter([f0.url, f1.url], poll_interval_s=60.0,
+                       rng=random.Random(1))
+    slow.start()
+    try:
+        with slow._lock:
+            slow.replicas[0].models = ("alpha",)
+            slow.replicas[1].models = ("beta",)
+        for _ in range(4):
+            st, body = http_request(
+                f"{slow.url}/v1/jobs", "POST",
+                {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2},
+            )
+            assert st == 202 and body["replica"] == "r0"
+        st, body = http_request(
+            f"{slow.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES["w0"]), "model": "beta", "lanes": 2},
+        )
+        assert st == 202 and body["replica"] == "r1"
+        st, body = http_request(
+            f"{slow.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES["w0"]), "model": "ghost", "lanes": 2},
+        )
+        assert st == 404 and body["error"]["type"] == "unknown_model"
+        assert "alpha" in body["error"]["message"]
+        assert slow.stats(refresh=False)["router"]["jobs_unroutable"] == 1
+    finally:
+        slow.stop()
+
+
+def test_p2c_prefers_lower_cached_depth(pair):
+    """With r0's cached depth pushed high, every p2c draw (both replicas
+    are always the two candidates) must route to r1."""
+    (_, f0), (_, f1), _ = pair
+    slow = FleetRouter([f0.url, f1.url], poll_interval_s=60.0,
+                       rng=random.Random(2))
+    slow.start()
+    try:
+        with slow._lock:
+            slow.replicas[0].queue_depth = 10_000
+            slow.replicas[1].queue_depth = 0
+        for _ in range(3):
+            st, body = http_request(
+                f"{slow.url}/v1/jobs", "POST",
+                {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2},
+            )
+            assert st == 202 and body["replica"] == "r1"
+        # optimistic bumps moved r1's cached depth, not r0's
+        with slow._lock:
+            assert slow.replicas[1].queue_depth == 3
+            assert slow.replicas[0].queue_depth == 10_000
+    finally:
+        slow.stop()
+
+
+def test_pinned_replica_and_unknown_pin(pair):
+    _, _, router = pair
+    for name in ("r0", "r1"):
+        st, body = http_request(
+            f"{router.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+             "replica": name},
+        )
+        assert st == 202 and body["replica"] == name
+    st, body = http_request(
+        f"{router.url}/v1/jobs", "POST",
+        {"trace": _wire(TRACES["w0"]), "model": "alpha", "replica": "r9"},
+    )
+    assert st == 404 and body["error"]["type"] == "unknown_replica"
+
+
+def test_teacher_forced_runs_anywhere(pair):
+    """model omitted (teacher-forced) places on any replica regardless of
+    the resident-model filter."""
+    _, _, router = pair
+    with router._lock:
+        router.replicas[0].models = ()
+        router.replicas[1].models = ()
+    st, body = http_request(
+        f"{router.url}/v1/jobs", "POST",
+        {"trace": _wire(TRACES["w0"]), "lanes": 2},
+    )
+    assert st == 202 and body["replica"] in ("r0", "r1")
+
+
+# -------------------------------------------------------------- failover
+
+def test_429_fails_over_to_next_candidate():
+    """A full replica (QueueFull) is *full*, not broken: the job fails
+    over, no ejection; only all-full surfaces the 429 to the client."""
+    s0, f0 = _replica(max_queue_depth=1, max_wait_ms=5000.0)
+    s1, f1 = _replica(max_wait_ms=5.0)
+    router = _router([f0, f1], poll_interval_s=60.0)
+    try:
+        # occupy r0's single queue slot (5s batch window: it stays pending)
+        st, body = http_request(
+            f"{router.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+             "replica": "r0"},
+        )
+        assert st == 202 and body["replica"] == "r0"
+        # pinned to the full replica -> 429 there -> lands on r1
+        st, body = http_request(
+            f"{router.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+             "replica": "r0"},
+        )
+        assert st == 202 and body["replica"] == "r1"
+        stats = router.stats(refresh=False)
+        assert stats["router"]["failovers"] >= 1
+        assert stats["router"]["ejections"] == 0
+        assert stats["router"]["healthy_replicas"] == 2
+    finally:
+        router.stop()
+        for f in (f0, f1):
+            f.stop(stop_service=True)
+
+
+def test_all_full_surfaces_429():
+    s0, f0 = _replica(max_queue_depth=1, max_wait_ms=5000.0)
+    s1, f1 = _replica(max_queue_depth=1, max_wait_ms=5000.0)
+    router = _router([f0, f1], poll_interval_s=60.0)
+    try:
+        for name in ("r0", "r1"):
+            st, _ = http_request(
+                f"{router.url}/v1/jobs", "POST",
+                {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+                 "replica": name},
+            )
+            assert st == 202
+        st, body = http_request(
+            f"{router.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2},
+        )
+        assert st == 429 and body["error"]["type"] == "queue_full"
+    finally:
+        router.stop()
+        for f in (f0, f1):
+            f.stop(stop_service=True)
+
+
+# -------------------------------------------- ejection, loss, readmission
+
+def test_kill_midstream_resubmits_to_survivor_then_readmit():
+    """The full failure drill, asserted via the router's own /v1/stats:
+
+    1. a job is accepted on slow replica r0 (5s batch window keeps it
+       pending) while `route_jobs` polls it through the router;
+    2. r0 dies mid-stream -> the status proxy ejects it and answers 503
+       ``replica_unavailable`` -> route_jobs resubmits; the job completes
+       on survivor r1 with the right result (nothing lost);
+    3. r0 restarts on its ORIGINAL port -> the backoff prober readmits it
+       and new jobs can land there again.
+    """
+    s0, f0 = _replica(max_wait_ms=5000.0)  # slow: accepted jobs sit pending
+    s1, f1 = _replica(max_wait_ms=5.0)
+    router = _router([f0, f1])
+    port0 = f0.port
+    try:
+        payloads = [{"id": "drill", "trace": _wire(TRACES["w1"]),
+                     "model": "beta", "lanes": 2, "replica": "r0"}]
+        out = {}
+
+        def run():
+            out["entries"] = route_jobs(router.url, payloads, timeout=120)
+
+        t = threading.Thread(target=run)
+        t.start()
+        _wait_until(
+            lambda: router.stats(refresh=False)["router"]["jobs_routed"] >= 1,
+            msg="job accepted on r0",
+        )
+        f0.stop(stop_service=True)  # kill the replica mid-stream
+        t.join(timeout=120)
+        assert not t.is_alive()
+
+        (e,) = out["entries"]
+        assert e["status"] == "done", e
+        assert e["replica"] == "r1" and e["resubmits"] == 1
+        serve_ref = SimServe(cache=CompileCache())
+        serve_ref.register("beta", sim_cfg=CFG)
+        h = serve_ref.submit(TRACES["w1"], "beta", n_lanes=2)
+        serve_ref.drain()
+        assert e["result"]["total_cycles"] == h.result().total_cycles
+
+        stats = router.stats(refresh=False)
+        assert stats["router"]["ejections"] >= 1
+        assert stats["router"]["healthy_replicas"] == 1
+        assert stats["replicas"]["r0"]["healthy"] is False
+
+        # restart on the SAME port; the prober readmits
+        s0b = SimServe(cache=CompileCache(), max_wait_ms=5.0)
+        for mid in MODELS:
+            s0b.register(mid, sim_cfg=CFG)
+        f0b = SimServeHTTP(s0b, port=port0)
+        f0b.start()
+        try:
+            _wait_until(
+                lambda: router.stats(refresh=False)["router"]["readmissions"] >= 1,
+                msg="r0 readmitted",
+            )
+            stats = router.stats(refresh=False)
+            assert stats["router"]["healthy_replicas"] == 2
+            st, body = http_request(
+                f"{router.url}/v1/jobs", "POST",
+                {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+                 "replica": "r0"},
+            )
+            assert st == 202 and body["replica"] == "r0"
+        finally:
+            f0b.stop(stop_service=True)
+    finally:
+        router.stop()
+        f1.stop(stop_service=True)
+        f0.stop(stop_service=True)  # idempotent if already stopped
+
+
+def test_poll_on_ejected_replica_is_structured_503(pair):
+    (_, f0), _, router = pair
+    st, body = http_request(
+        f"{router.url}/v1/jobs", "POST",
+        {"trace": _wire(TRACES["w0"]), "model": "alpha", "lanes": 2,
+         "replica": "r0"},
+    )
+    assert st == 202
+    rid = body["job_id"]
+    with router._lock:  # eject r0 from the router's point of view
+        router.replicas[0].healthy = False
+    st, body = http_request(f"{router.url}/v1/jobs/{rid}")
+    assert st == 503
+    assert body["error"]["type"] == "replica_unavailable"
+    assert "resubmit" in body["error"]["message"]
+
+
+def test_no_healthy_replicas_is_503_no_replicas():
+    """A router whose only replica never answered starts with it ejected
+    and refuses jobs with a structured 503 (clients back off and retry)."""
+    import socket
+
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    dead_port = s.getsockname()[1]
+    s.close()
+    router = FleetRouter([f"http://127.0.0.1:{dead_port}"],
+                         probe_initial_s=10.0, probe_cap_s=10.0)
+    router.start()
+    try:
+        st, body = http_request(f"{router.url}/v1/healthz")
+        assert st == 503 and body["ok"] is False
+        st, body = http_request(
+            f"{router.url}/v1/jobs", "POST",
+            {"trace": _wire(TRACES["w0"]), "model": "alpha"},
+        )
+        assert st == 503 and body["error"]["type"] == "no_replicas"
+        assert router.stats(refresh=False)["router"]["jobs_unroutable"] == 1
+    finally:
+        router.stop()
+
+
+# ------------------------------------------------------------- id parsing
+
+def test_bad_router_job_ids(pair):
+    _, _, router = pair
+    for rid in ("garbage", "r9:1", "r0:notanint", ":5"):
+        st, body = http_request(f"{router.url}/v1/jobs/{rid}")
+        assert st == 400, rid
+        assert body["error"]["type"] == "bad_request"
+    st, body = http_request(f"{router.url}/v1/nope")
+    assert st == 404 and body["error"]["type"] == "not_found"

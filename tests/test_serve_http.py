@@ -17,7 +17,12 @@ from conftest import synth_arrays
 
 from repro.core.simulator import SimConfig
 from repro.serving.compile_cache import CompileCache
-from repro.serving.http import SimServeHTTP, http_request, wait_job
+from repro.serving.http import (
+    SimServeHTTP,
+    TransportError,
+    http_request,
+    wait_job,
+)
 from repro.serving.service import SimServe
 
 CFG = SimConfig(ctx_len=8)
@@ -293,6 +298,93 @@ def test_http_stats_histograms_count_jobs(live):
     assert tele["queue_depth"]["count"] == 3  # one depth sample per admission
     assert sum(tele["service_ms"]["counts"]) == 3
     assert stats["breakers"]["alpha"]["state"] == "closed"
+
+
+def test_http_models_endpoint_lists_residents(live):
+    """The router's discovery endpoint: resident model ids as JSON."""
+    serve, front = live
+    st, body = http_request(f"{front.url}/v1/models")
+    assert st == 200
+    assert set(MODELS) <= set(body["models"])
+    assert body["models"] == sorted(body["models"])
+
+
+# ------------------------------------------------------- bounded tracking
+
+def test_http_evicted_handle_is_410_not_404():
+    """Regression: an id aged out of the bounded handle map must answer a
+    structured 410 "evicted" — distinct from 404 for an id this front-end
+    never issued — so a late poller can tell gone from never-existed."""
+    serve = _make_serve()  # not started: jobs stay pending, nothing drains
+    with SimServeHTTP(serve, start_service=False, max_tracked_jobs=2) as front:
+        ids = []
+        for name in ("w0", "w1", "w2"):
+            st, body = http_request(
+                f"{front.url}/v1/jobs", "POST",
+                {"trace": _wire(TRACES[name]), "model": "alpha", "lanes": 2},
+            )
+            assert st == 202
+            ids.append(body["job_id"])
+        # the third submit evicted the first handle
+        st, body = http_request(f"{front.url}/v1/jobs/{ids[0]}")
+        assert st == 410
+        assert body["error"]["type"] == "evicted"
+        assert "max_tracked_jobs=2" in body["error"]["message"]
+        # the survivors still answer, and a never-issued id is still 404
+        for jid in ids[1:]:
+            st, body = http_request(f"{front.url}/v1/jobs/{jid}")
+            assert st == 200 and body["status"] == "pending"
+        st, body = http_request(f"{front.url}/v1/jobs/99999")
+        assert st == 404 and body["error"]["type"] == "unknown_job"
+
+
+# -------------------------------------------------------- transport errors
+
+def test_http_request_closed_port_raises_transport_error():
+    """connection refused is a typed TransportError, not a leaked raw
+    URLError — the router's eject-vs-failover branch keys on this type."""
+    import socket
+
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()  # nothing listens here now
+    with pytest.raises(TransportError) as exc:
+        http_request(f"http://127.0.0.1:{port}/v1/healthz", timeout=5)
+    assert f":{port}" in exc.value.url
+    assert isinstance(exc.value.cause, OSError)
+
+
+def test_http_request_mid_read_drop_raises_transport_error():
+    """A server that dies mid-response (headers promise more body than it
+    sends) surfaces the same typed TransportError."""
+    import socket
+
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+
+    def half_answer():
+        conn, _ = srv.accept()
+        conn.recv(65536)  # drain the request
+        conn.sendall(
+            b"HTTP/1.1 200 OK\r\n"
+            b"Content-Type: application/json\r\n"
+            b"Content-Length: 1000\r\n\r\n"
+            b'{"partial":'  # then hang up mid-body
+        )
+        conn.close()
+
+    t = threading.Thread(target=half_answer, daemon=True)
+    t.start()
+    try:
+        with pytest.raises(TransportError) as exc:
+            http_request(f"http://127.0.0.1:{port}/v1/stats", timeout=10)
+        assert exc.value.cause is not None
+    finally:
+        t.join(timeout=10)
+        srv.close()
 
 
 # --------------------------------------------------------------- CLI smoke

@@ -364,3 +364,95 @@ def test_simnet_stats_passthrough():
     assert stats["telemetry"]["service_ms"]["count"] == 1
     assert sn.model_id in stats["breakers"]
     assert stats["breakers"][sn.model_id]["state"] == CLOSED
+
+
+# ---------------------------------------------------------- fleet merging
+
+def test_merge_snapshots_counts_add_exactly():
+    from repro.serving.telemetry import merge_snapshots
+
+    rng = np.random.default_rng(7)
+    a, b = Histogram(LATENCY_BOUNDS_MS), Histogram(LATENCY_BOUNDS_MS)
+    xs = rng.uniform(0.1, 70000.0, size=200)
+    for v in xs[:120]:
+        a.observe(v)
+    for v in xs[120:]:
+        b.observe(v)
+    merged = merge_snapshots([a.snapshot(), b.snapshot()])
+    assert merged["count"] == 200
+    assert merged["counts"] == [x + y for x, y in
+                                zip(a.snapshot()["counts"],
+                                    b.snapshot()["counts"])]
+    assert merged["sum"] == pytest.approx(float(np.sum(xs)))
+    assert merged["min"] == pytest.approx(float(np.min(xs)))
+    assert merged["max"] == pytest.approx(float(np.max(xs)))
+
+
+def test_merge_snapshots_percentiles_match_union_histogram():
+    """Merging snapshots must answer the same percentiles as one
+    histogram that saw every sample — fixed buckets add exactly."""
+    from repro.serving.telemetry import merge_snapshots
+
+    rng = np.random.default_rng(11)
+    parts = [rng.uniform(0.5, 40000.0, size=n) for n in (50, 90, 17)]
+    snaps = []
+    union = Histogram(LATENCY_BOUNDS_MS)
+    for xs in parts:
+        h = Histogram(LATENCY_BOUNDS_MS)
+        for v in xs:
+            h.observe(v)
+            union.observe(v)
+        snaps.append(h.snapshot())
+    merged = merge_snapshots(snaps)
+    want = union.snapshot()
+    for q in ("p50", "p90", "p99"):
+        assert merged[q] == pytest.approx(want[q])
+
+
+def test_merge_snapshots_edge_cases():
+    from repro.serving.telemetry import merge_snapshots
+
+    empty = merge_snapshots([])
+    assert empty["count"] == 0 and empty["mean"] is None
+    h = Histogram(LATENCY_BOUNDS_MS)
+    h.observe(3.0)
+    snap = h.snapshot()
+    # Nones (ejected replicas) are dropped; a single survivor passes through
+    merged = merge_snapshots([None, snap, None])
+    assert merged["count"] == 1 and merged["p50"] == snap["p50"]
+    other = Histogram((1.0, 2.0)).snapshot()
+    with pytest.raises(ValueError, match="differing bounds"):
+        merge_snapshots([snap, other])
+
+
+# ----------------------------------------------------------------- backoff
+
+def test_backoff_sequence_caps_and_resets():
+    from repro.serving.backoff import Backoff
+
+    b = Backoff(0.005, 0.25, factor=2.0)
+    seen = [b.next() for _ in range(10)]
+    assert seen[:6] == [0.005, 0.01, 0.02, 0.04, 0.08, 0.16]
+    assert seen[6:] == [0.25] * 4  # capped
+    assert b.peek() == 0.25
+    b.reset()
+    assert b.peek() == 0.005 and b.next() == 0.005
+
+
+def test_backoff_rejects_bad_parameters():
+    from repro.serving.backoff import Backoff
+
+    for bad in (dict(initial_s=0.0), dict(initial_s=-1.0),
+                dict(initial_s=0.5, cap_s=0.1), dict(factor=0.5)):
+        with pytest.raises(ValueError):
+            Backoff(**bad)
+
+
+def test_backoff_sleep_advances(monkeypatch):
+    from repro.serving import backoff as bk
+
+    slept = []
+    monkeypatch.setattr(bk.time, "sleep", slept.append)
+    b = bk.Backoff(0.01, 0.04)
+    assert [b.sleep() for _ in range(4)] == [0.01, 0.02, 0.04, 0.04]
+    assert slept == [0.01, 0.02, 0.04, 0.04]
