@@ -14,6 +14,7 @@ Sections:
   fig7       parallel-simulation error vs sub-trace size
   fig8_9_10  simulation throughput, device scaling + training amortization
   throughput batched multi-workload engine: packed vs sequential instr/s
+  contention multicore co-run traces: solo vs contention-augmented training
   table5     design-space relative accuracy (branch predictors, L2 size)
   a64fx      second processor configuration (paper §4.1)
   roofline   dry-run roofline summary (full tables: python -m benchmarks.roofline)
@@ -127,7 +128,7 @@ def fig8_9_10():
 def throughput():
     data = _load("packed_throughput.json")
     _sec("Batched multi-workload engine — packed vs sequential throughput")
-    if data is None:
+    if data is None or "packed" not in data:
         print("(artifacts missing — run `python -m benchmarks.pipeline`)")
         return
     seq, packed = data["sequential"], data["packed"]
@@ -236,6 +237,44 @@ def throughput():
                   f"→ {tm['ratio']:.1f}x less queue-state HBM traffic")
 
 
+def contention():
+    data = _load("packed_throughput.json")
+    _sec("Contention — multicore DES co-run traces: solo vs augmented training")
+    ct = (data or {}).get("contention")
+    if ct is None:
+        print("(artifacts missing — run `python -m benchmarks.pipeline`)")
+        return
+    rep = ct["report_stream_chase"]
+    print(f"  mixes: {', '.join(ct['mixes'])} "
+          f"(train seed {ct['train_seed']}, held-out eval seed {ct['eval_seed']})")
+    print(f"  DES mix_stream_chase ({rep['n_cores']} cores, shared L2, "
+          f"bus {rep['mc']['bus_cycles_per_fill']} cyc/fill, "
+          f"{rep['mc']['mshrs']} MSHRs):")
+    for i, core in enumerate(rep["cores"]):
+        print(f"    core {i} ({core['name']}): solo CPI "
+              f"{core['solo_cpi']:.3f} -> co-run {core['corun_cpi']:.3f} "
+              f"({core['slowdown']:.2f}x), shared-L2 hit rate "
+              f"{core['l2_hit_rate_corun']:.3f} (solo {core['l2_hit_rate_solo']:.3f})")
+        CSV_ROWS.append((f"contention/slowdown_{core['name']}", 0.0,
+                         core["slowdown"]))
+    print(f"  bus occupancy {rep['bus']['occupancy']:.3f}, "
+          f"queue {rep['bus']['queue_cycles']} cyc, "
+          f"MSHR wait {rep['bus']['mshr_wait_cycles']} cyc")
+    print("  CPI error on held-out co-run traces (one simulate_many pack):")
+    for mid, row in ct["models"].items():
+        print(f"    {mid:16s} avg {100*row['avg_err']:6.2f}%  "
+              f"(worst {100*max(row['per_trace'].values()):6.2f}%)")
+        CSV_ROWS.append((f"contention/{mid}_avg_err", 0.0, row["avg_err"]))
+    pk = ct["pack"]
+    print(f"  heterogeneous pack: {pk['n_workloads']} co-run workloads, "
+          f"lanes {pk['n_lanes']}, retire widths {pk['retire_widths']} "
+          f"in ONE simulate_many — totals "
+          f"{'bit-identical' if pk['totals_match'] else 'MISMATCH'} "
+          f"vs per-trace simulation")
+    CSV_ROWS.append(("contention/pack_totals_match", 0.0,
+                     float(pk["totals_match"])))
+
+
 def table5():
     data = _load("table5_usecases.json")
     _sec("Table 5 / §5 — design-space exploration relative accuracy")
@@ -305,6 +344,7 @@ def main() -> None:
     fig7()
     fig8_9_10()
     throughput()
+    contention()
     table5()
     a64fx()
     roofline_summary()

@@ -4,7 +4,10 @@ Subcommands mirror the session API (`repro.core.session.SimNet`); every
 command prints a JSON document (the typed results' `.to_dict()`), so runs
 compose with jq / CI checks.
 
-  trace     run the reference DES over benchmarks, cache npz traces
+  trace     run the reference DES over benchmarks, cache npz traces;
+            --multicore N / --mix NAME co-runs a mix on the multicore DES
+            (shared L2 + bus + MSHRs) and emits the solo-vs-co-run
+            contention report; --list enumerates benchmarks and mixes
   train     DES traces → teacher-forced dataset → predictor → artifact dir
   simulate  load a PredictorArtifact, simulate benchmarks (one packed call)
   sweep     design-space sweep (L2 sizes or branch predictors) in one pack;
@@ -76,6 +79,20 @@ def _gen_traces(benchmarks, n, o3_name, cache_dir):
 # ---------------------------------------------------------------- commands
 
 def cmd_trace(args) -> int:
+    if args.list:
+        from repro.des.workloads import (
+            ML_BENCHMARKS, MULTICORE_MIXES, SIM_BENCHMARKS,
+        )
+        _emit({
+            "benchmarks": {
+                "ml": sorted(ML_BENCHMARKS),
+                "sim": sorted(SIM_BENCHMARKS),
+            },
+            "mixes": list(MULTICORE_MIXES),
+        })
+        return 0
+    if args.multicore or args.mix:
+        return _trace_multicore(args)
     traces = _gen_traces(args.bench, args.n, args.o3, args.cache_dir)
     _emit({
         "traces": [
@@ -84,6 +101,34 @@ def cmd_trace(args) -> int:
             for t in traces
         ],
         "cache_dir": args.cache_dir,
+    })
+    return 0
+
+
+def _trace_multicore(args) -> int:
+    """Co-run a mix on the multicore DES and emit the contention report —
+    the train-free golden check: with sharing on, every core's co-run CPI
+    must sit at or above its solo CPI ("golden_contended")."""
+    from repro.des.multicore import contention_report
+    from repro.des.workloads import get_mix
+
+    mix = args.mix or "mix_stream_chase"
+    n = min(args.n, 2000) if args.quick else args.n
+    progs = get_mix(mix, n, n_cores=args.multicore)
+    traces, report = contention_report(
+        progs, o3=O3_CONFIGS[args.o3] or O3Config(), mix=mix
+    )
+    _emit({
+        "mix": mix,
+        "n_cores": report.n_cores,
+        "n_instructions_base": n,
+        "traces": [
+            {"name": t.name, "n_instructions": int(t.n),
+             "des_cycles": t.total_cycles, "des_cpi": t.cpi}
+            for t in traces
+        ],
+        "contention": report.to_dict(),
+        "golden_contended": all(s >= 1.0 for s in report.slowdowns),
     })
     return 0
 
@@ -148,23 +193,43 @@ def cmd_sweep(args) -> int:
     points = args.points or (defaults[:2] if args.quick else defaults)
     sn = _session(args)
     jobs = []
-    for bench in args.bench:
-        prog = get_benchmark(bench, n)
+    if args.multicore or args.mix:
+        # multicore sweep: at each design point, co-run the mix on the
+        # multicore DES (contention-dependent features ride the traces —
+        # there is no lightweight co-run history path) and sweep one job
+        # per core
+        from repro.des.multicore import MulticoreSim
+        from repro.des.workloads import get_mix
+
+        mix = args.mix or "mix_stream_chase"
+        progs = get_mix(mix, n, n_cores=args.multicore)
         for pt in points:
             if args.param == "l2":
                 label, kw = f"l2={int(pt)//1024}kB", {"caches": dict(l2_size=int(pt))}
             else:
                 label, kw = f"bpred={pt}", {"bpred": pt}
-            if sn.params is None:
-                # teacher-forced needs DES labels at each design point
-                tr = O3Simulator(O3Config(**kw)).run(prog)
-            else:
-                tr = trace_with_history(prog, **kw)
-            jobs.append((label, tr))
+            traces, _ = MulticoreSim(O3Config(**kw)).run(progs)
+            for i, tr in enumerate(traces):
+                jobs.append((f"{label}/c{i}", tr))
+    else:
+        for bench in args.bench:
+            prog = get_benchmark(bench, n)
+            for pt in points:
+                if args.param == "l2":
+                    label, kw = f"l2={int(pt)//1024}kB", {"caches": dict(l2_size=int(pt))}
+                else:
+                    label, kw = f"bpred={pt}", {"bpred": pt}
+                if sn.params is None:
+                    # teacher-forced needs DES labels at each design point
+                    tr = O3Simulator(O3Config(**kw)).run(prog)
+                else:
+                    tr = trace_with_history(prog, **kw)
+                jobs.append((label, tr))
     res = sn.sweep(jobs, n_lanes=args.lanes)
     _emit({
         "param": args.param,
-        "benchmarks": args.bench,
+        "benchmarks": (args.mix or "mix_stream_chase") if (args.multicore or args.mix)
+        else args.bench,
         "n_instructions": n,
         "mode": "predictor" if sn.params is not None else "teacher-forced",
         "sweep": res.to_dict(),
@@ -425,8 +490,15 @@ def cmd_bench(args) -> int:
     from repro.serving.compile_cache import CompileCache
 
     n = 3000 if args.quick else args.n
-    names = args.bench or ["mlb_stream", "mlb_compute", "sim_loop", "mlb_branchy"]
-    traces = _gen_traces(names, n, args.o3, args.cache_dir)
+    if args.multicore or args.mix:
+        # co-run traces: genuinely heterogeneous lane dynamics in the pack
+        traces = api.generate_corun_traces(
+            args.mix or "mix_stream_chase", n, o3=O3_CONFIGS[args.o3],
+            n_cores=args.multicore, cache_dir=args.cache_dir,
+        )
+    else:
+        names = args.bench or ["mlb_stream", "mlb_compute", "sim_loop", "mlb_branchy"]
+        traces = _gen_traces(names, n, args.o3, args.cache_dir)
     art = SimNet.from_artifact(args.artifact).artifact if args.artifact else None
 
     def fresh():
@@ -465,6 +537,17 @@ def _common(p, n_default=10000):
     p.add_argument("--quick", action="store_true", help="tiny settings (CI smoke)")
 
 
+def _multicore_flags(p):
+    p.add_argument("--multicore", type=int, default=None, metavar="N",
+                   help="co-run N cores on the multicore DES (shared L2 + "
+                        "bus + MSHRs); N defaults to the mix's natural "
+                        "width when only --mix is given")
+    p.add_argument("--mix", default=None,
+                   help="co-run mix name (see `repro trace --list`); "
+                        "defaults to mix_stream_chase when --multicore is "
+                        "given")
+
+
 def _engine_flags(p):
     p.add_argument("--layout", choices=["ring", "roll"], default=None,
                    help="simulator step layout (default: the artifact's / "
@@ -485,6 +568,9 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("trace", help="run the reference DES, cache traces")
     _common(p)
+    _multicore_flags(p)
+    p.add_argument("--list", action="store_true",
+                   help="enumerate benchmarks and multicore mixes as JSON")
     p.set_defaults(fn=cmd_trace, bench_default=["mlb_mixed"])
 
     p = sub.add_parser("train", help="train a predictor, save a PredictorArtifact")
@@ -515,6 +601,7 @@ def build_parser() -> argparse.ArgumentParser:
     p = sub.add_parser("sweep", help="design-space sweep in one packed call")
     _common(p)
     _engine_flags(p)
+    _multicore_flags(p)
     p.add_argument("--artifact", default=None,
                    help="PredictorArtifact directory (omit for teacher-forced replay)")
     p.add_argument("--param", choices=["l2", "bpred"], default="l2")
@@ -591,6 +678,7 @@ def build_parser() -> argparse.ArgumentParser:
     p = sub.add_parser("bench", help="packed vs sequential throughput microbench")
     _common(p, n_default=6000)
     _engine_flags(p)
+    _multicore_flags(p)
     p.add_argument("--artifact", default=None)
     p.set_defaults(fn=cmd_bench)
 

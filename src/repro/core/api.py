@@ -42,6 +42,7 @@ deprecation release and are gone — use the session / service methods.)
 """
 from __future__ import annotations
 
+import dataclasses
 from pathlib import Path
 from typing import List, Optional, Sequence
 
@@ -62,7 +63,8 @@ from repro.serving.service import SimServe
 __all__ = [
     "SimNet", "SimServe",
     "SimResult", "SweepResult", "TrainResult", "WorkloadResult",
-    "generate_traces", "build_training_data", "prediction_errors", "phase_cpis",
+    "generate_traces", "generate_corun_traces", "build_training_data",
+    "prediction_errors", "phase_cpis",
 ]
 
 
@@ -89,6 +91,50 @@ def generate_traces(
             tr.save(p)
         out.append(tr)
     return out
+
+
+def generate_corun_traces(
+    mix: str,
+    n_instructions: int,
+    o3: Optional[O3Config] = None,
+    mc=None,
+    n_cores: Optional[int] = None,
+    seed: int = 0,
+    cache_dir: Optional[str] = None,
+) -> List[Trace]:
+    """Run the multicore DES over a co-run mix (with optional npz caching).
+
+    Returns one `Trace` per core — same schema as single-core traces, but
+    with contention-dependent latencies/levels baked in, so the feature
+    pipeline, training and the packed engine consume them unchanged.
+    Per-core lengths differ (mixes balance cycle time, not instruction
+    count). `seed` selects the program instances: use one seed for
+    training sets and a different one for held-out co-run evaluation.
+    """
+    from repro.des.multicore import MulticoreConfig, MulticoreSim
+    from repro.des.workloads import get_mix
+
+    o3 = o3 or O3Config()
+    mc = mc if mc is not None else MulticoreConfig()
+    progs = get_mix(mix, n_instructions, n_cores=n_cores, seed=seed)
+    tag = f"{mix}_{o3.name}_{mc.cache_tag}_s{seed}_{n_instructions}"
+    paths = (
+        [Path(cache_dir) / f"{tag}_c{i}.npz" for i in range(len(progs))]
+        if cache_dir
+        else None
+    )
+    if paths and all(p.exists() for p in paths):
+        return [Trace.load(p) for p in paths]
+    traces, _ = MulticoreSim(o3, mc).run(progs)
+    traces = [
+        dataclasses.replace(t, name=f"{mix}_s{seed}_c{i}")
+        for i, t in enumerate(traces)
+    ]
+    if paths:
+        Path(cache_dir).mkdir(parents=True, exist_ok=True)
+        for t, p in zip(traces, paths):
+            t.save(p)
+    return traces
 
 
 def build_training_data(traces, sim_cfg: Optional[SimConfig] = None, **kw):

@@ -232,4 +232,86 @@ ALL_BENCHMARKS = {**ML_BENCHMARKS, **SIM_BENCHMARKS}
 
 
 def get_benchmark(name: str, T: int) -> Program:
-    return ALL_BENCHMARKS[name](T)
+    try:
+        gen = ALL_BENCHMARKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown benchmark {name!r}; available: "
+            f"{', '.join(sorted(ALL_BENCHMARKS))}"
+        ) from None
+    return gen(T)
+
+
+# --- multicore co-run mixes --------------------------------------------
+# Each mix is a list of per-core (length_multiplier, generator) slots;
+# `get_mix` instantiates one program per core with a distinct
+# deterministic seed, and cycles the slots when asked for more cores than
+# the mix's natural width (so `--multicore 4 --mix mix_stream_chase`
+# gives stream/chase/stream/chase with four distinct seeds). Length
+# multipliers balance per-core *cycle* time: a CPI-0.8 compute core gets
+# more instructions than a CPI-24 chase core, so co-runners actually
+# overlap instead of the fast one finishing during the slow one's warmup
+# (this is also what makes co-run trace packs genuinely mixed-length).
+# The stream+chase pairing is the textbook streamer/victim scenario: the
+# chase's 128KB working set is resident in the shared L2 when run solo,
+# and the streaming co-runner continuously evicts it; chase_sym uses 1MB
+# each so two cores oversubscribe the 1MB L2.
+_MIX_SPECS: Dict[str, List] = {
+    "mix_stream_chase": [
+        (4, lambda T, s: gen_stream(T, seed=s, working_set=1 << 22)),
+        (1, lambda T, s: gen_pointer_chase(T, seed=s, working_set=1 << 17)),
+    ],
+    "mix_compute_stream": [
+        (5, lambda T, s: gen_compute(T, seed=s)),
+        (1, lambda T, s: gen_stream(T, seed=s, working_set=1 << 22)),
+    ],
+    # symmetric chase×N (natural width 2; widen with n_cores)
+    "mix_chase_sym": [
+        (1, lambda T, s: gen_pointer_chase(T, seed=s, working_set=1 << 20)),
+        (1, lambda T, s: gen_pointer_chase(T, seed=s, working_set=1 << 20)),
+    ],
+}
+
+MULTICORE_MIXES: List[str] = sorted(_MIX_SPECS)
+
+
+def _relocate(prog: Program, core_idx: int) -> Program:
+    """Shift a core's address space so co-runners are disjoint in the
+    shared L2 — contention must come from capacity/bandwidth, not from
+    accidentally prefetching a sibling's lines. Offsets are multiples of
+    every cache's (n_sets × line), so the program's own set-mapping and
+    hit/miss structure are unchanged; 0x05000000 is not commensurate with
+    the generators' 0x10000000-spaced data bases, so no two cores'
+    regions collide, and 8 cores stay inside the int32 address-key budget
+    (`core.features.address_keys`)."""
+    if core_idx == 0:
+        return prog
+    prog.addr = np.where(prog.addr > 0, prog.addr + core_idx * 0x05000000, 0)
+    prog.pc = prog.pc + core_idx * 0x00100000
+    return prog
+
+
+def get_mix(name: str, T: int, n_cores: int | None = None, seed: int = 0) -> List[Program]:
+    """Instantiate a co-run mix: one `Program` per core, deterministic in
+    (name, T, n_cores, seed). `T` is the base per-core instruction count;
+    each slot scales it by its length multiplier. Different `seed`s give
+    disjoint program instances — training sets and held-out eval sets of
+    the same mix."""
+    try:
+        spec = _MIX_SPECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown mix {name!r}; available: {', '.join(MULTICORE_MIXES)}"
+        ) from None
+    n = n_cores if n_cores else len(spec)
+    if n < 1:
+        raise ValueError(f"n_cores must be >= 1, got {n}")
+    if n > 8:
+        raise ValueError(
+            f"n_cores must be <= 8 (int32 address-key budget), got {n}"
+        )
+    progs = []
+    for i in range(n):
+        mult, fn = spec[i % len(spec)]
+        progs.append(_relocate(fn(mult * T, 1000 + seed * 131 + i * 7), i))
+    return progs
