@@ -654,8 +654,9 @@ def step_throughput(data, quick):
           f"{tf_rows[1]['speedup_vs_roll']:.2f}x roll "
           f"(bf16 {tf_rows[2]['speedup_vs_roll']:.2f}x), predictor ring "
           f"{pred_rows[1]['speedup_vs_roll']:.2f}x roll", flush=True)
-    if "contention" in prior:  # step_contention may have run first
-        out["contention"] = prior["contention"]
+    for sec in ("contention", "chaos"):  # those steps may have run first
+        if sec in prior:
+            out[sec] = prior[sec]
     _save_json("packed_throughput.json", out)
 
 
@@ -764,6 +765,35 @@ def step_contention(data, quick):
     _save_json("packed_throughput.json", prior)
 
 
+def step_chaos(quick):
+    """Seeded chaos drill over the serving stack (PR 9): deterministic
+    faults at all five injection sites — corrupt artifact bytes, failed
+    compile, hung batch vs the watchdog, transport drops, a replica crash
+    — with the integrity guards and the fleet supervisor healing around
+    them. The drill's own invariants (survivors bit-identical to a
+    fault-free baseline, zero jobs lost, crashed replica restarted and
+    readmitted, corrupt model breaker-isolated) ride in the ``checks``
+    maps. Merges a `chaos` section into packed_throughput.json."""
+    from repro.serving.chaos import run_chaos_fleet, run_chaos_single
+
+    path = ART / "packed_throughput.json"
+    prior = json.loads(path.read_text()) if path.exists() else {}
+    if "chaos" in prior:
+        return
+    single = run_chaos_single(seed=7, quick=quick,
+                              batch_timeout_s=10.0 if quick else 20.0)
+    fleet = run_chaos_fleet(seed=7, quick=quick, n_replicas=2,
+                            batch_timeout_s=20.0 if quick else 30.0)
+    prior["chaos"] = {"seed": 7, "single": single, "fleet": fleet,
+                      "ok": single["ok"] and fleet["ok"]}
+    print(f"[pipeline] chaos: single ok={single['ok']} "
+          f"({single['wall_seconds']:.1f}s), fleet ok={fleet['ok']} "
+          f"({fleet['wall_seconds']:.1f}s, "
+          f"{fleet['supervisor'].get('restarts_total', 0)} supervised "
+          f"restart(s), {fleet['resubmits']} resubmits)", flush=True)
+    _save_json("packed_throughput.json", prior)
+
+
 def step_a64fx(quick):
     """Second processor configuration (§4.1): train on A64FX-labelled
     traces, save the artifact, evaluate held-out benchmarks in ONE pack."""
@@ -818,7 +848,7 @@ def main():
     train_zoo(data, args.quick, skip_missing=args.eval_only)
     steps = args.steps.split(",") if args.steps != "all" else [
         "table4", "fig56", "fig7", "fig89", "throughput", "contention",
-        "table5", "a64fx"]
+        "chaos", "table5", "a64fx"]
     if "table4" in steps:
         step_table4(data, args.quick)
     if "fig56" in steps:
@@ -831,6 +861,8 @@ def main():
         step_throughput(data, args.quick)
     if "contention" in steps:
         step_contention(data, args.quick)
+    if "chaos" in steps:
+        step_chaos(args.quick)
     if "table5" in steps:
         step_table5(data, args.quick)
     if "a64fx" in steps:

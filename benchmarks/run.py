@@ -275,6 +275,36 @@ def contention():
                      float(pk["totals_match"])))
 
 
+def chaos():
+    data = _load("packed_throughput.json")
+    _sec("Chaos — seeded fault injection, integrity guards, self-healing")
+    ch = (data or {}).get("chaos")
+    if ch is None:
+        print("(artifacts missing — run `python -m benchmarks.pipeline` "
+              "or `repro chaos --quick` directly)")
+        return
+    for lane in ("single", "fleet"):
+        d = ch.get(lane)
+        if not d:
+            continue
+        failed = sorted(k for k, v in d["checks"].items() if not v)
+        print(f"  {lane}: {'OK' if d['ok'] else 'FAILED ' + str(failed)} — "
+              f"{d['n_jobs']} jobs, {d['resubmits']} resubmits, "
+              f"{d['wall_seconds']:.1f}s (seed {d['seed']})")
+        CSV_ROWS.append((f"chaos/{lane}_ok", 0.0, float(d["ok"])))
+        CSV_ROWS.append((f"chaos/{lane}_resubmits", 0.0,
+                         float(d["resubmits"])))
+    fl = ch.get("fleet")
+    if fl:
+        sup = fl.get("supervisor", {})
+        print(f"  fleet supervisor: {sup.get('chaos_kills', 0)} injected "
+              f"crash(es), {sup.get('restarts_total', 0)} supervised "
+              f"restart(s), {fl['router'].get('readmissions', 0)} "
+              f"readmission(s); healthz {fl['healthz'].get('status')}")
+        CSV_ROWS.append(("chaos/fleet_restarts", 0.0,
+                         float(sup.get("restarts_total", 0))))
+
+
 def table5():
     data = _load("table5_usecases.json")
     _sec("Table 5 / §5 — design-space exploration relative accuracy")
@@ -345,6 +375,7 @@ def main() -> None:
     fig8_9_10()
     throughput()
     contention()
+    chaos()
     table5()
     a64fx()
     roofline_summary()

@@ -1,4 +1,4 @@
 from repro.checkpoint.artifact import PredictorArtifact
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import ArtifactCorrupt, CheckpointManager
 
-__all__ = ["CheckpointManager", "PredictorArtifact"]
+__all__ = ["ArtifactCorrupt", "CheckpointManager", "PredictorArtifact"]

@@ -12,7 +12,10 @@ API surface (documented in DESIGN.md §5).
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
+import os
 import shutil
 import threading
 import time
@@ -22,6 +25,31 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class ArtifactCorrupt(RuntimeError):
+    """Checkpoint payload bytes do not match the manifest's sha256.
+
+    Typed so callers (the model registry) can isolate the corrupt artifact —
+    trip its circuit breaker — without guessing from a pickle/zip error.
+    """
+
+
+def _write_fsync(path: Path, data: bytes) -> None:
+    """Write bytes and fsync the file so the rename can't publish torn bytes."""
+    with open(path, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: Path) -> None:
+    """fsync a directory entry (durability of renames/creates within it)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree, prefix=""):
@@ -78,17 +106,31 @@ class CheckpointManager:
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
-            np.savez(tmp / "arrays.npz", **host)
+            # Serialize to memory first so the manifest can carry a checksum
+            # of the exact bytes that hit disk.
+            buf = io.BytesIO()
+            np.savez(buf, **host)
+            payload = buf.getvalue()
+            _write_fsync(tmp / "arrays.npz", payload)
             manifest = {
                 "step": step,
                 "time": time.time(),
                 "keys": sorted(host),
+                "sha256": {"arrays.npz": hashlib.sha256(payload).hexdigest()},
                 "metadata": metadata or {},
             }
-            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+            _write_fsync(
+                tmp / "manifest.json", json.dumps(manifest, indent=2).encode("utf-8")
+            )
+            # Durability order: file contents → tmp dir entries → rename →
+            # parent dir entry. A crash at any point leaves either the old
+            # checkpoint or a complete new one, never a manifest over torn
+            # payload bytes.
+            _fsync_dir(tmp)
             if final.exists():
                 shutil.rmtree(final)
             tmp.rename(final)  # atomic on same filesystem
+            _fsync_dir(self.dir)
             self._prune()
 
         if self.async_save:
@@ -134,7 +176,21 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = self.dir / f"step_{step:010d}"
-        z = np.load(path / "arrays.npz")
+        raw = (path / "arrays.npz").read_bytes()
+        # Chaos seam: a corrupt trigger flips a byte here, *before* the
+        # checksum check — exercising exactly the on-disk bit-rot path.
+        from repro.serving import faults
+
+        raw = faults.fire("artifact.load", payload=raw)
+        want = self.read_manifest(step).get("sha256", {}).get("arrays.npz")
+        if want is not None:  # pre-checksum checkpoints load unverified
+            got = hashlib.sha256(raw).hexdigest()
+            if got != want:
+                raise ArtifactCorrupt(
+                    f"{path / 'arrays.npz'}: sha256 mismatch "
+                    f"(manifest {want[:12]}…, payload {got[:12]}…)"
+                )
+        z = np.load(io.BytesIO(raw))
         flat = {k: z[k] for k in z.files}
         tree = _unflatten(flat)
         if shardings is not None:

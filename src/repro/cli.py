@@ -259,13 +259,18 @@ def cmd_serve(args) -> int:
     SIGTERM/SIGINT — the mode `repro fleet` spawns N of. ``--model
     ID=PATH`` makes artifacts resident (teacher-forced replay is always
     available)."""
+    from repro.checkpoint import ArtifactCorrupt
+    from repro.serving import faults
     from repro.serving.backoff import Backoff
 
+    if getattr(args, "faults", None):
+        faults.install(faults.FaultPlan.from_spec(args.faults))
     spec = json.loads(Path(args.jobs).read_text()) if args.jobs else {}
     serve = SimServe(
         chunk=args.chunk,
         max_queue_depth=args.max_queue_depth,
         max_wait_ms=args.max_wait_ms,
+        batch_timeout_s=args.batch_timeout_s,
     )
     models = dict(spec.get("models") or {})
     for entry in args.model or []:
@@ -276,7 +281,14 @@ def cmd_serve(args) -> int:
             return 2
         models[mid] = path
     for mid, path in models.items():
-        serve.register(mid, path)
+        try:
+            serve.register(mid, path)
+        except ArtifactCorrupt as e:
+            # the registry already tripped this model's breaker — keep the
+            # replica up so its healthy residents stay in rotation and
+            # /v1/healthz reports "degraded" with the open breaker
+            print(f"model {mid!r} failed integrity check, serving without "
+                  f"it: {e}", file=sys.stderr)
     if args.jobs is None:
         if args.http is None:
             print("serve needs --jobs (batch mode) or --http "
@@ -480,6 +492,26 @@ def cmd_fleet(args) -> int:
     return 1 if failed else 0
 
 
+def cmd_chaos(args) -> int:
+    """Seeded chaos drill over the serving stack: deterministic faults at
+    the named injection sites (corrupt artifact bytes, failed compile,
+    hung batch vs the watchdog, NaN-poisoned cycles — plus transport
+    drops and a replica crash when ``--replicas`` > 0), then assert the
+    self-healing invariants: every non-faulted job completes bit-identical
+    to a fault-free baseline, zero jobs lost or duplicated, the corrupt
+    model breaker-isolated while the others serve, the crashed replica
+    restarted and readmitted. Exits non-zero if any invariant fails."""
+    from repro.serving.chaos import run_chaos
+
+    out = run_chaos(seed=args.seed, quick=args.quick,
+                    replicas=args.replicas,
+                    batch_timeout_s=args.batch_timeout_s)
+    if args.out:
+        Path(args.out).write_text(json.dumps(out, indent=2))
+    _emit(out)
+    return 0 if out["ok"] else 1
+
+
 def cmd_bench(args) -> int:
     """Packed-vs-sequential: W workloads through one packed engine call vs
     one freshly-compiled engine per workload (the pre-packing behaviour —
@@ -645,6 +677,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="default per-job deadline: jobs still queued this "
                         "many ms after submit fail loudly before dispatch "
                         '(a job file entry\'s own "deadline_ms" wins)')
+    p.add_argument("--batch-timeout-s", type=float, default=0.0,
+                   help="batch watchdog: a dispatch still running after "
+                        "this many seconds fails its own jobs and the "
+                        "drain loop keeps serving (0 = disabled)")
+    p.add_argument("--faults", default=None, metavar="SPEC",
+                   help="arm a deterministic fault plan, e.g. "
+                        "'seed=7;compile=fail_once:1' (the REPRO_FAULTS "
+                        "env var works everywhere; this flag wins)")
     p.set_defaults(fn=cmd_serve)
 
     p = sub.add_parser(
@@ -675,6 +715,26 @@ def build_parser() -> argparse.ArgumentParser:
                    help="per-replica limit to announce its port")
     p.set_defaults(fn=cmd_fleet)
 
+    p = sub.add_parser(
+        "chaos",
+        help="seeded fault-injection drill: corrupt/fail/hang/poison the "
+             "serving stack and assert the self-healing invariants",
+    )
+    p.add_argument("--seed", type=int, default=7,
+                   help="fault-plan seed: the same seed reproduces the "
+                        "same fault schedule bit-for-bit")
+    p.add_argument("--quick", action="store_true",
+                   help="CI-smoke sizing (shorter traces)")
+    p.add_argument("--replicas", type=int, default=0,
+                   help="also run the fleet drill with this many replica "
+                        "subprocesses (transport drops + replica crash + "
+                        "supervised restart; 0 = single-process drill only)")
+    p.add_argument("--batch-timeout-s", type=float, default=10.0,
+                   help="watchdog deadline the hung-batch fault must trip")
+    p.add_argument("--out", default=None,
+                   help="also write the JSON report here")
+    p.set_defaults(fn=cmd_chaos)
+
     p = sub.add_parser("bench", help="packed vs sequential throughput microbench")
     _common(p, n_default=6000)
     _engine_flags(p)
@@ -689,6 +749,11 @@ def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     if getattr(args, "bench", None) is None:
         args.bench = getattr(args, "bench_default", None)
+    if getattr(args, "faults", None) is None:
+        # REPRO_FAULTS arms the process-wide plan for ANY subcommand; an
+        # explicit --faults flag (serve) wins and installs in cmd_serve
+        from repro.serving import faults
+        faults.install_from_env()
     return args.fn(args)
 
 

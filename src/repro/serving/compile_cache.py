@@ -140,6 +140,14 @@ class CompileCache:
             return exe
         t0 = time.time()
         try:
+            # Chaos seam: the "compile" fault site meters real build
+            # attempts only (hits and future-waiters above never arrive
+            # here), so an injected failure exercises exactly the
+            # failed-build path: waiters see it, the key stays clean, and
+            # the next get() retries.
+            from repro.serving import faults
+
+            faults.fire("compile")
             exe = builder()
         except BaseException as e:
             # a failed build must not count as a compile or wedge the key:

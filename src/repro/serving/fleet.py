@@ -32,10 +32,13 @@ import select
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro.serving import faults
+from repro.serving.backoff import Backoff
 from repro.serving.router import FleetRouter
 from repro.serving.telemetry import log_event
 import logging
@@ -83,6 +86,9 @@ class ReplicaProcess:
         cache_dir: Optional[str] = None,
         log_dir: Optional[str] = None,
         cmd: Optional[Sequence[str]] = None,
+        stop_grace_s: float = 10.0,
+        batch_timeout_s: float = 0.0,
+        faults_spec: Optional[str] = None,
     ):
         self.name = name
         self.models = dict(models or {})
@@ -91,6 +97,13 @@ class ReplicaProcess:
         self.max_wait_ms = float(max_wait_ms)
         self.chunk = int(chunk)
         self.cache_dir = cache_dir
+        # SIGTERM → this much grace to flush telemetry/logs → SIGKILL
+        self.stop_grace_s = float(stop_grace_s)
+        self.batch_timeout_s = float(batch_timeout_s)
+        # a chaos plan for the *replica process* (its own seed/site specs,
+        # installed by the child's CLI entry — independent of any plan in
+        # this driver process)
+        self.faults_spec = faults_spec
         self._log_dir = log_dir or tempfile.mkdtemp(prefix="repro-fleet-")
         self.stderr_path = Path(self._log_dir) / f"{self.name}.stderr.log"
         self._cmd_override = list(cmd) if cmd is not None else None
@@ -105,6 +118,10 @@ class ReplicaProcess:
                "--max-queue-depth", str(self.max_queue_depth),
                "--max-wait-ms", str(self.max_wait_ms),
                "--chunk", str(self.chunk)]
+        if self.batch_timeout_s > 0:
+            cmd += ["--batch-timeout-s", str(self.batch_timeout_s)]
+        if self.faults_spec:
+            cmd += ["--faults", self.faults_spec]
         for mid, path in sorted(self.models.items()):
             cmd += ["--model", f"{mid}={path}"]
         if self.cache_dir:
@@ -188,14 +205,19 @@ class ReplicaProcess:
             self._proc.wait()
         self._close_files()
 
-    def stop(self, timeout_s: float = 10.0) -> None:
-        """Graceful terminate, then kill."""
+    def stop(self, timeout_s: Optional[float] = None) -> None:
+        """Graceful teardown: SIGTERM, wait up to ``stop_grace_s`` (the
+        CLI's standing server traps SIGTERM and flushes its final stats),
+        then SIGKILL. ``timeout_s`` overrides the grace for this call."""
+        grace = self.stop_grace_s if timeout_s is None else float(timeout_s)
         p = self._proc
         if p is not None and p.poll() is None:
             p.terminate()
             try:
-                p.wait(timeout=timeout_s)
+                p.wait(timeout=grace)
             except subprocess.TimeoutExpired:
+                log_event("fleet.stop_forced", level=logging.WARNING,
+                          replica=self.name, grace_s=grace)
                 p.kill()
                 p.wait()
         self._close_files()
@@ -236,6 +258,14 @@ class Fleet:
         poll_interval_s: float = 0.25,
         probe_initial_s: float = 0.05,
         probe_cap_s: float = 2.0,
+        stop_grace_s: float = 10.0,
+        batch_timeout_s: float = 0.0,
+        replica_faults: Optional[str] = None,
+        supervise: bool = False,
+        restart_budget: int = 3,
+        restart_backoff_initial_s: float = 0.25,
+        restart_backoff_cap_s: float = 5.0,
+        supervise_interval_s: float = 0.2,
     ):
         if n_replicas < 1:
             raise ValueError("a fleet needs at least one replica")
@@ -258,10 +288,30 @@ class Fleet:
                         else models),
                 max_queue_depth=max_queue_depth, max_wait_ms=max_wait_ms,
                 chunk=chunk, cache_dir=cache_dir, log_dir=log_dir,
+                stop_grace_s=stop_grace_s, batch_timeout_s=batch_timeout_s,
+                faults_spec=replica_faults,
             )
             for i in range(n_replicas)
         ]
         self.router: Optional[FleetRouter] = None
+        # -- supervision: detect dead replicas, restart under a capped
+        # budget with backoff pacing (off by default: failure drills that
+        # hand-kill replicas expect them to STAY dead)
+        self.supervise = bool(supervise)
+        self.restart_budget = int(restart_budget)
+        self.supervise_interval_s = float(supervise_interval_s)
+        self._sup_backoff_kw = dict(
+            initial_s=restart_backoff_initial_s,
+            cap_s=max(restart_backoff_cap_s, restart_backoff_initial_s),
+        )
+        self._sup_lock = threading.Lock()
+        self._sup_thread: Optional[threading.Thread] = None
+        self._sup_stop = threading.Event()
+        self._restarts: Dict[str, int] = {r.name: 0 for r in self.replicas}
+        self._restart_failures = 0
+        self._chaos_kills = 0
+        self._sup_backoff: Dict[str, Backoff] = {}
+        self._sup_next_t: Dict[str, float] = {}
 
     # ------------------------------------------------------------ lifecycle
 
@@ -278,7 +328,15 @@ class Fleet:
                 [r.url for r in self.replicas], port=self.router_port,
                 **self._router_kw,
             )
+            self.router.extra_stats = self.supervisor_stats
             self.router.start()
+            if self.supervise:
+                self._sup_stop = threading.Event()
+                self._sup_thread = threading.Thread(
+                    target=self._supervisor_loop, name="fleet-supervisor",
+                    daemon=True,
+                )
+                self._sup_thread.start()
         except BaseException:
             self.stop()  # no orphan subprocesses, ever
             raise
@@ -288,6 +346,11 @@ class Fleet:
         return self
 
     def stop(self) -> None:
+        # supervisor first: teardown must not race a resurrection
+        self._sup_stop.set()
+        t, self._sup_thread = self._sup_thread, None
+        if t is not None:
+            t.join(timeout=30)
         router, self.router = self.router, None
         if router is not None:
             router.stop()
@@ -322,6 +385,76 @@ class Fleet:
         log_event("fleet.restart", level=logging.WARNING, replica=r.name,
                   port=r.port)
         return r
+
+    # ----------------------------------------------------------- supervision
+
+    def _supervisor_loop(self) -> None:
+        """Detect dead replica processes and restart them on their
+        original ports — paced by per-replica exponential backoff (after
+        *every* attempt, so a crash-looping replica cannot hot-loop) and
+        capped by ``restart_budget`` per replica (a budget-exhausted
+        replica stays down, loudly visible in ``supervisor_stats()``).
+
+        Also the ``replica.crash`` chaos site: one arrival per tick; a
+        failure decision SIGKILLs a deterministically chosen victim, which
+        this same loop then detects and heals — the drill that proves
+        crash → restart → readmission end to end."""
+        while not self._sup_stop.wait(self.supervise_interval_s):
+            try:
+                faults.fire("replica.crash")
+            except faults.FaultInjected as e:
+                victim = self.replicas[e.arrival % len(self.replicas)]
+                if victim.alive:
+                    victim.kill()
+                    with self._sup_lock:
+                        self._chaos_kills += 1
+                    log_event("fleet.chaos_kill", level=logging.WARNING,
+                              replica=victim.name, arrival=e.arrival)
+            now = time.monotonic()
+            for i, r in enumerate(self.replicas):
+                if self._sup_stop.is_set():
+                    return
+                if r.alive:
+                    continue
+                with self._sup_lock:
+                    if self._restarts[r.name] >= self.restart_budget:
+                        continue
+                    bo = self._sup_backoff.setdefault(
+                        r.name, Backoff(**self._sup_backoff_kw)
+                    )
+                    if now < self._sup_next_t.get(r.name, 0.0):
+                        continue
+                    self._sup_next_t[r.name] = now + bo.next()
+                if self._sup_stop.is_set():  # teardown owns the replicas now
+                    return
+                try:
+                    self.restart_replica(i)
+                except (ReplicaSpawnError, OSError) as e:
+                    with self._sup_lock:
+                        self._restart_failures += 1
+                    log_event("fleet.restart_failed", level=logging.ERROR,
+                              replica=r.name, error=repr(e))
+                else:
+                    with self._sup_lock:
+                        self._restarts[r.name] += 1
+                    log_event("fleet.supervised_restart",
+                              level=logging.WARNING, replica=r.name,
+                              port=r.port,
+                              restarts=self._restarts[r.name])
+
+    def supervisor_stats(self) -> Dict[str, Any]:
+        """Restart counters, merged into the router's ``/v1/stats`` as
+        the ``supervisor`` section (via `FleetRouter.extra_stats`)."""
+        with self._sup_lock:
+            return {
+                "enabled": self.supervise,
+                "restart_budget": self.restart_budget,
+                "restarts": dict(self._restarts),
+                "restarts_total": sum(self._restarts.values()),
+                "restart_failures": self._restart_failures,
+                "chaos_kills": self._chaos_kills,
+                "replicas_alive": sum(r.alive for r in self.replicas),
+            }
 
     # -------------------------------------------------------------- readout
 

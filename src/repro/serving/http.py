@@ -374,8 +374,21 @@ class _Handler(JsonHandler):
             path = self.path.split("?", 1)[0].rstrip("/") or "/"
             if path == "/v1/healthz":
                 running = fe.service.running
+                # degraded: serving, but at least one model's breaker is
+                # open (isolated artifact). 200 on purpose — a load
+                # balancer must not eject a replica that still serves its
+                # healthy residents; the router surfaces the detail.
+                open_breakers = sorted(
+                    mid for mid, snap in
+                    fe.service.registry.breaker_snapshots().items()
+                    if snap["state"] == "open"
+                )
+                status = ("down" if not running
+                          else "degraded" if open_breakers else "ok")
                 return (200 if running else 503), {
                     "ok": running,
+                    "status": status,
+                    "open_breakers": open_breakers,
                     "running": running,
                     "models_resident": sorted(fe.service.registry.ids()),
                 }
@@ -418,6 +431,16 @@ def http_request(url: str, method: str = "GET", payload=None,
     import http.client
     import urllib.error
     import urllib.request
+
+    # Chaos seam: an injected transport fault fires BEFORE the request is
+    # sent, so a failed send provably never reached the server — retrying
+    # a faulted POST cannot duplicate the job.
+    from repro.serving import faults
+
+    try:
+        faults.fire("http.request")
+    except faults.FaultInjected as e:
+        raise TransportError(url, e) from e
 
     if data is None and payload is not None:
         data = json.dumps(payload, default=float).encode()

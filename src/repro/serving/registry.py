@@ -24,6 +24,7 @@ import time
 from typing import Dict, Iterable, Optional
 
 from repro.checkpoint.artifact import PredictorArtifact
+from repro.checkpoint.manager import ArtifactCorrupt
 from repro.core.predictor import PredictorConfig
 from repro.core.simulator import SimConfig
 from repro.serving.compile_cache import CompileCache
@@ -90,7 +91,15 @@ class ModelRegistry:
     def load(self, model_id: str, path, sim_cfg: Optional[SimConfig] = None) -> str:
         """Load a `PredictorArtifact` directory once; all later requests
         against ``model_id`` share the resident weights."""
-        art = PredictorArtifact.load(path)
+        try:
+            art = PredictorArtifact.load(path)
+        except ArtifactCorrupt:
+            # Integrity guard: a corrupt artifact is isolated immediately —
+            # force-open its breaker so submits against this id fast-fail
+            # while every other resident keeps serving. No point counting
+            # to the failure threshold: bit-rot does not heal on retry.
+            self.breaker(model_id).trip("artifact corrupt")
+            raise
         return self.add(
             model_id, params=art.params, pcfg=art.pcfg,
             sim_cfg=sim_cfg or art.sim_cfg,

@@ -66,7 +66,8 @@ from repro.serving.telemetry import log_event, merge_snapshots
 # the counter keys of SimServe.stats() that add across replicas
 _SUMMED_COUNTERS = (
     "jobs_submitted", "jobs_completed", "jobs_rejected", "jobs_expired",
-    "jobs_breaker_rejected", "jobs_pending", "batches", "lanes_live",
+    "jobs_breaker_rejected", "jobs_failed_numeric", "batches_timed_out",
+    "jobs_pending", "batches", "lanes_live",
     "lanes_dispatched", "dead_lane_steps", "loop_errors",
 )
 _HISTOGRAMS = ("queue_wait_ms", "service_ms", "queue_depth", "batch_jobs")
@@ -87,11 +88,20 @@ class ReplicaState:
     next_probe_t: float = 0.0
     probe_backoff: Backoff = None  # type: ignore[assignment]
     ejections: int = 0
+    open_breakers: Tuple[str, ...] = ()  # degraded-health detail
+
+    @property
+    def status(self) -> str:
+        if not self.healthy:
+            return "down"
+        return "degraded" if self.open_breakers else "ok"
 
     def snapshot(self) -> Dict[str, Any]:
         return {
             "url": self.url,
             "healthy": self.healthy,
+            "status": self.status,
+            "open_breakers": sorted(self.open_breakers),
             "models": sorted(self.models),
             "queue_depth": self.queue_depth,
             "ejections": self.ejections,
@@ -149,6 +159,10 @@ class FleetRouter:
         self._thread: Optional[threading.Thread] = None
         self._prober: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
+        # merged into /v1/stats as "supervisor": the process manager
+        # (serving.fleet) hangs its restart counters here so replica
+        # lifecycle is observable through the same wire surface
+        self.extra_stats = None  # Optional[Callable[[], Dict[str, Any]]]
 
     # ------------------------------------------------------------ lifecycle
 
@@ -221,7 +235,7 @@ class FleetRouter:
         refresh. Success readmits the replica; failure pushes the next
         probe out on the replica's exponential backoff."""
         try:
-            status, _ = http_request(f"{r.url}/v1/healthz", timeout=5.0)
+            status, hz = http_request(f"{r.url}/v1/healthz", timeout=5.0)
             if status == 200:
                 _, models = http_request(f"{r.url}/v1/models", timeout=5.0)
                 st, stats = http_request(f"{r.url}/v1/stats", timeout=5.0)
@@ -229,6 +243,7 @@ class FleetRouter:
                     was_down = not r.healthy
                     r.healthy = True
                     r.models = tuple(models.get("models", ()))
+                    r.open_breakers = tuple(hz.get("open_breakers", ()))
                     if st == 200:
                         r.last_stats = stats
                         r.queue_depth = int(stats.get("jobs_pending", 0))
@@ -262,6 +277,12 @@ class FleetRouter:
                 r.last_stats = stats
                 r.queue_depth = int(stats.get("jobs_pending", 0))
                 r.models = tuple(models.get("models", r.models))
+                # degraded detail rides the stats poll: any resident
+                # breaker open → the replica serves but is impaired
+                r.open_breakers = tuple(sorted(
+                    mid for mid, snap in (stats.get("breakers") or {}).items()
+                    if isinstance(snap, dict) and snap.get("state") == "open"
+                ))
 
     def _prober_loop(self) -> None:
         """The background thread that owns liveness: periodic stats polls
@@ -425,12 +446,20 @@ class FleetRouter:
     def healthz(self) -> Tuple[int, Dict[str, Any]]:
         with self._lock:
             health = {r.name: r.healthy for r in self.replicas}
+            statuses = {r.name: r.status for r in self.replicas}
+            degraded = {r.name: sorted(r.open_breakers)
+                        for r in self.replicas if r.status == "degraded"}
         ok = any(health.values())
+        status = ("down" if not ok
+                  else "degraded" if degraded else "ok")
         return (200 if ok else 503), {
             "ok": ok,
+            "status": status,
             "healthy_replicas": sum(health.values()),
             "total_replicas": len(health),
             "replicas": health,
+            "replica_status": statuses,
+            "degraded": degraded,
         }
 
     def models(self) -> Dict[str, Any]:
@@ -487,8 +516,15 @@ class FleetRouter:
             h: merge_snapshots([s.get("telemetry", {}).get(h) for s in live])
             for h in _HISTOGRAMS
         }
-        return {"router": router, "fleet": fleet, "replicas": per,
-                "telemetry": telemetry}
+        out = {"router": router, "fleet": fleet, "replicas": per,
+               "telemetry": telemetry}
+        hook = self.extra_stats
+        if hook is not None:
+            try:
+                out["supervisor"] = hook()
+            except Exception as e:  # stats must not die on a hook bug
+                out["supervisor"] = {"error": repr(e)}
+        return out
 
     def _count_unroutable(self) -> None:
         with self._lock:
@@ -538,6 +574,7 @@ def route_jobs(
     *,
     timeout: float = 600.0,
     resubmit_lost: bool = True,
+    retry_failed: int = 0,
     poll_s: float = 0.005,
     poll_cap_s: float = 0.25,
 ) -> List[Dict[str, Any]]:
@@ -555,17 +592,35 @@ def route_jobs(
       records the loss loudly instead). Simulation jobs are idempotent
       pure functions of their payload, so a resubmission changes nothing
       but where the work ran.
+    - a `TransportError` talking to the *router* (or an injected
+      ``http.request`` chaos fault, which fires before the request is
+      sent — never a duplicate) → capped-backoff retry until ``timeout``.
+    - ``retry_failed=N``: a job that terminates ``failed`` with a
+      ``batch_failed`` error is resubmitted up to N times. The failed
+      attempt produced no result, so this cannot duplicate work — it is
+      how a chaos drill proves transient faults (injected compile
+      failure, watchdogged batch, NaN poisoning) cost retries, not jobs.
 
     Returns one entry per payload: ``{"id", "job_id", "replica",
     "status", "resubmits"}`` plus ``"result"`` when done or ``"error"``
     when failed/lost."""
     deadline = time.monotonic() + timeout
 
+    def request(url, method="GET", payload=None):
+        """http_request with transport-level retries against the router."""
+        backoff = Backoff(poll_s, poll_cap_s)
+        while True:
+            try:
+                return http_request(url, method, payload, timeout=timeout)
+            except TransportError:
+                if time.monotonic() >= deadline:
+                    raise
+                backoff.sleep()
+
     def post(payload) -> Tuple[str, Optional[str], Optional[Dict]]:
         backoff = Backoff(poll_s, poll_cap_s)
         while True:
-            status, body = http_request(f"{base_url}/v1/jobs", "POST",
-                                        payload, timeout=timeout)
+            status, body = request(f"{base_url}/v1/jobs", "POST", payload)
             if status == 202:
                 return body["job_id"], body.get("replica"), None
             retryable = status == 429 or (
@@ -588,16 +643,29 @@ def route_jobs(
     for i, e in enumerate(entries):
         if e["status"] != "pending":
             continue
+        failed_retries = 0
         backoff = Backoff(poll_s, poll_cap_s)
         while True:
-            status, body = http_request(
-                f"{base_url}/v1/jobs/{e['job_id']}", timeout=timeout)
+            status, body = request(f"{base_url}/v1/jobs/{e['job_id']}")
             lost = (
                 (status == 503
                  and body.get("error", {}).get("type") == "replica_unavailable")
                 or status in (404, 410)
             )
             if status == 200 and body.get("status") != "pending":
+                err_type = (body.get("error") or {}).get("type")
+                if (body.get("status") == "failed"
+                        and err_type == "batch_failed"
+                        and failed_retries < retry_failed):
+                    # the attempt failed terminally — no result exists, so
+                    # a fresh submit re-runs, never duplicates, the job
+                    jid, replica, err = post(payloads[i])
+                    if err is None:
+                        failed_retries += 1
+                        e.update(job_id=jid, replica=replica)
+                        e["resubmits"] += 1
+                        backoff.reset()
+                        continue
                 e["status"] = body["status"]
                 e["replica"] = body.get("replica", e["replica"])
                 if body["status"] == "done":

@@ -71,8 +71,18 @@ from repro.serving.compile_cache import (
     global_cache,
     lane_bucket,
 )
+from repro.serving import faults
 from repro.serving.registry import ModelRegistry, TEACHER_FORCED
+from repro.serving.simnet_engine import NumericError
 from repro.serving.telemetry import Telemetry, log_event, new_correlation_id
+
+
+class BatchTimeout(RuntimeError):
+    """A batch dispatch exceeded ``batch_timeout_s``.
+
+    The watchdog fails the hung batch's jobs (their handles raise this)
+    and the drain loop keeps serving everyone else; the abandoned dispatch
+    thread can never pin results onto the already-failed jobs."""
 
 
 class QueueFull(RuntimeError):
@@ -265,6 +275,7 @@ class SimServe:
         min_batch_lanes: int = 8,
         lane_budget_depth: int = 0,
         aging_ms: float = 1000.0,
+        batch_timeout_s: float = 0.0,
         breaker_threshold: int = 5,
         breaker_reset_s: float = 30.0,
         mesh=None,
@@ -298,6 +309,11 @@ class SimServe:
         # effective priority, so sustained high-priority traffic cannot
         # park low-priority jobs forever. 0 disables aging.
         self.aging_ms = float(aging_ms)
+        # batch watchdog: a dispatch running longer than this fails its own
+        # batch (BatchTimeout) instead of wedging the drain loop forever.
+        # 0 disables the watchdog — dispatch runs inline on the drain
+        # thread, exactly the pre-watchdog behaviour.
+        self.batch_timeout_s = float(batch_timeout_s)
         self.telemetry = Telemetry(clock=clock)
         self._qlock = threading.Lock()  # guards _pending + counters + _rr
         self._pending: List[_Job] = []
@@ -312,6 +328,8 @@ class SimServe:
         self._jobs_rejected = 0  # QueueFull refusals (admission honesty)
         self._jobs_expired = 0  # deadline_ms ran out before dispatch
         self._jobs_breaker_rejected = 0  # open-breaker fast-fails at submit
+        self._jobs_failed_numeric = 0  # numeric-guard batch failures
+        self._batches_timed_out = 0  # watchdog kills
         self._lanes_live = 0
         self._lanes_dispatched = 0
         self._dead_lane_steps = 0  # bucketing overhead, for stats honesty
@@ -707,6 +725,17 @@ class SimServe:
                     job.error = e
                     job.done_evt.set()
                 self.registry.breaker(key[0]).record_failure()
+                if isinstance(e, NumericError):
+                    # numeric guard: the engine refused NaN/Inf totals —
+                    # count loudly; silent CPI corruption is the one
+                    # failure mode observability cannot recover from
+                    with self._qlock:
+                        self._jobs_failed_numeric += len(batch)
+                    log_event("batch.numeric_failure", level=logging.ERROR,
+                              model=key[0],
+                              bad_workloads=e.bad_workloads,
+                              job_ids=[j.job_id for j in batch],
+                              correlation_ids=[j.corr_id for j in batch])
                 log_event("batch.failed", level=logging.ERROR,
                           model=key[0], job_ids=[j.job_id for j in batch],
                           correlation_ids=[j.corr_id for j in batch],
@@ -727,9 +756,16 @@ class SimServe:
         cap = min(j.chunk or self.chunk for j in jobs)
         chunk = chunk_bucket(max_packed_steps(arrs, lanes), cap)
         timeit = jobs[0].timeit
-        res = engine.simulate_many(
-            arrs, n_lanes=lanes, chunk=chunk, cfgs=cfgs, timeit=timeit
-        )
+
+        def dispatch():
+            # chaos seam: delay_ms simulates a hung dispatch (watchdog
+            # prey), fail an engine that detonates mid-batch
+            faults.fire("batch.execute")
+            return engine.simulate_many(
+                arrs, n_lanes=lanes, chunk=chunk, cfgs=cfgs, timeit=timeit
+            )
+
+        res = self._dispatch_guarded(model_id, jobs, dispatch)
         report = BatchReport(
             model_id=model_id,
             job_ids=tuple(j.job_id for j in jobs),
@@ -769,6 +805,47 @@ class SimServe:
             self._n_batches += 1
             self._batches.append(report)
         return report
+
+    def _dispatch_guarded(self, model_id: str, jobs: List[_Job], dispatch):
+        """Run one engine dispatch under the batch watchdog.
+
+        With ``batch_timeout_s`` unset the call is inline (zero overhead,
+        pre-watchdog semantics). Otherwise the dispatch runs on a fresh
+        daemon thread and a join deadline guards it: on expiry the batch
+        fails with `BatchTimeout` while the abandoned thread finishes (or
+        hangs) harmlessly — its result lands in a dead box, never on the
+        jobs, because all result-pinning happens on the caller after a
+        successful join. Real wall clock on purpose: the watchdog guards
+        against actual hangs, not simulated time."""
+        if self.batch_timeout_s <= 0:
+            return dispatch()
+        box: Dict[str, Any] = {}
+
+        def worker():
+            try:
+                box["res"] = dispatch()
+            except BaseException as e:  # hand *any* failure to the caller
+                box["err"] = e
+
+        t = threading.Thread(
+            target=worker, name="simserve-dispatch", daemon=True
+        )
+        t.start()
+        t.join(self.batch_timeout_s)
+        if t.is_alive():
+            with self._qlock:
+                self._batches_timed_out += 1
+            log_event("batch.watchdog", level=logging.ERROR,
+                      model=model_id, timeout_s=self.batch_timeout_s,
+                      job_ids=[j.job_id for j in jobs],
+                      correlation_ids=[j.corr_id for j in jobs])
+            raise BatchTimeout(
+                f"batch for model {model_id!r} exceeded "
+                f"{self.batch_timeout_s:g}s ({len(jobs)} jobs)"
+            )
+        if "err" in box:
+            raise box["err"]
+        return box["res"]
 
     @staticmethod
     def _workload_result(job: _Job, res: dict, i: int) -> WorkloadResult:
@@ -821,6 +898,8 @@ class SimServe:
                 "jobs_rejected": self._jobs_rejected,
                 "jobs_expired": self._jobs_expired,
                 "jobs_breaker_rejected": self._jobs_breaker_rejected,
+                "jobs_failed_numeric": self._jobs_failed_numeric,
+                "batches_timed_out": self._batches_timed_out,
                 "jobs_pending": len(self._pending),
                 "batches": self._n_batches,
                 "lanes_live": self._lanes_live,
@@ -840,8 +919,10 @@ class SimServe:
             "min_batch_lanes": self.min_batch_lanes,
             "lane_budget_depth": self.lane_budget_depth,
             "aging_ms": self.aging_ms,
+            "batch_timeout_s": self.batch_timeout_s,
             "telemetry": self.telemetry.snapshot(),
             "breakers": self.registry.breaker_snapshots(),
             "cache": self.cache.stats(),
+            "faults": faults.snapshot(),  # None unless a chaos plan is live
         })
         return snap

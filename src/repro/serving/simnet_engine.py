@@ -50,6 +50,7 @@ from repro.core.simulator import (
     pad_packed_lanes,
     workload_totals,
 )
+from repro.serving import faults
 from repro.serving.compile_cache import (
     CompileCache,
     ExecutableKey,
@@ -57,6 +58,20 @@ from repro.serving.compile_cache import (
     lane_bucket,
     mesh_fingerprint,
 )
+
+
+class NumericError(RuntimeError):
+    """Predictor outputs produced non-finite cycle totals (NaN/Inf).
+
+    Raised by the numeric guard in ``simulate_many`` so a poisoned batch
+    fails loudly instead of silently corrupting CPI totals downstream."""
+
+    def __init__(self, bad_workloads, cycles):
+        self.bad_workloads = [int(i) for i in bad_workloads]
+        super().__init__(
+            f"non-finite cycle totals for workload(s) {self.bad_workloads}: "
+            f"{[float(cycles[i]) for i in self.bad_workloads]}"
+        )
 
 
 def _lane_axes(mesh):
@@ -294,6 +309,15 @@ class SimNetEngine:
         if timeit:
             dt, lane_total, cycles, overflow = one_pass()
         cycles = np.asarray(cycles, np.float64)
+        # Numeric guard: a NaN/Inf anywhere in the predictor's latency
+        # stream propagates into these per-workload sums — catch it here,
+        # at the batch boundary, before it can poison aggregated CPI.
+        # (The chaos "batch.numeric" corrupt trigger poisons the totals
+        # directly, flushing this exact path.)
+        cycles = faults.fire("batch.numeric", payload=cycles)
+        finite = np.isfinite(cycles)
+        if not finite.all():
+            raise NumericError(np.flatnonzero(~finite), cycles)
         n_instr = packed.n_instructions
         total_instr = int(n_instr.sum())
         return {

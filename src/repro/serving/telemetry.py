@@ -268,6 +268,23 @@ class CircuitBreaker:
                 self._state = OPEN
                 self._opened_at = now
 
+    def trip(self, reason: str = "") -> None:
+        """Force-open immediately, bypassing the failure count — for faults
+        that cannot heal on retry (a checksum-failed artifact)."""
+        now = self._clock()
+        with self._lock:
+            if self._state != OPEN:
+                self._times_opened += 1
+                log_event("breaker.tripped", level=logging.ERROR,
+                          model=self.name, reason=reason)
+            self._state = OPEN
+            self._opened_at = now
+            self._consecutive_failures = max(
+                self._consecutive_failures, self.failure_threshold
+            )
+            self._total_failures += 1
+            self._probe_at = None
+
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             return {

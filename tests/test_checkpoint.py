@@ -73,3 +73,42 @@ def test_no_partial_checkpoint_visible(tmp_path):
     mgr = CheckpointManager(tmp_path)
     (tmp_path / ".tmp_step_99").mkdir()
     assert mgr.all_steps() == []
+
+
+def test_manifest_carries_payload_sha256(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(5, tree())
+    digest = mgr.read_manifest(5)["sha256"]["arrays.npz"]
+    assert len(digest) == 64 and int(digest, 16) >= 0  # hex sha256
+    import hashlib
+    raw = (tmp_path / "step_0000000005" / "arrays.npz").read_bytes()
+    assert hashlib.sha256(raw).hexdigest() == digest
+
+
+def test_restore_detects_payload_corruption(tmp_path):
+    from repro.checkpoint import ArtifactCorrupt
+
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(5, tree())
+    npz = tmp_path / "step_0000000005" / "arrays.npz"
+    raw = bytearray(npz.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF  # one flipped bit-rot byte
+    npz.write_bytes(bytes(raw))
+    with pytest.raises(ArtifactCorrupt, match="sha256 mismatch"):
+        mgr.restore()
+
+
+def test_restore_without_checksum_is_back_compat(tmp_path):
+    """Checkpoints written before the integrity guard carry no sha256 —
+    they must keep restoring (no retroactive corruption claims)."""
+    import json as _json
+
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(5, tree())
+    mpath = tmp_path / "step_0000000005" / "manifest.json"
+    manifest = _json.loads(mpath.read_text())
+    del manifest["sha256"]
+    mpath.write_text(_json.dumps(manifest))
+    restored, step = mgr.restore()
+    assert step == 5
+    assert int(restored["opt"]["step"]) == 7

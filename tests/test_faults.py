@@ -1,0 +1,253 @@
+"""Chaos plane: deterministic fault injection, the integrity guards it
+exercises, and the self-healing seams around them.
+
+Covers the PR 9 contracts:
+  * a FaultPlan is a pure function of (seed, site, arrival) — same seed,
+    same arrival sequence, bit-identical decision schedule — and its
+    spec string round-trips;
+  * artifact integrity: corrupted payload bytes raise ArtifactCorrupt
+    and trip the model's breaker while other residents keep serving;
+  * the numeric guard fails NaN-poisoned batches loudly and counts them;
+  * the batch watchdog kills a hung dispatch without wedging the drain
+    loop;
+  * the breaker half-open probe recovers a model after injected compile
+    failures (fake clock — no real cooldown waits);
+  * /v1/healthz reports 200 "degraded" with the open breakers listed.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ArtifactCorrupt
+from repro.core.simulator import SimConfig
+from repro.des.o3 import O3Config, O3Simulator
+from repro.des.workloads import get_benchmark
+from repro.serving import faults
+from repro.serving.compile_cache import CompileCache
+from repro.serving.faults import FAULT_SITES, FaultInjected, FaultPlan, FaultSpec
+from repro.serving.service import BatchTimeout, ModelUnavailable, SimServe
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return O3Simulator(O3Config()).run(get_benchmark("sim_loop", 1500))
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _drive(plan, site, n):
+    """Fire ``site`` n times, recording survive/fail per arrival."""
+    out = []
+    for _ in range(n):
+        try:
+            plan.fire(site, sleep=lambda s: None)
+            out.append("ok")
+        except FaultInjected:
+            out.append("fail")
+    return out
+
+
+# ------------------------------------------------------------ determinism
+
+def test_same_seed_same_schedule():
+    sites = {"http.request": FaultSpec(after=3, fail_rate=0.3),
+             "compile": FaultSpec(fail_once=2)}
+    a = FaultPlan(11, sites)
+    b = FaultPlan(11, sites)
+    for site in sites:
+        assert _drive(a, site, 200) == _drive(b, site, 200)
+    assert a.decision_log() == b.decision_log()
+    # a different seed reshuffles the fail_rate stream
+    c = FaultPlan(12, sites)
+    _drive(c, "http.request", 200)
+    assert c.decision_log() != a.decision_log()
+
+
+def test_spec_round_trip_and_env_install():
+    spec = ("seed=7;artifact.load=corrupt:1;batch.execute=delay_ms:500,"
+            "delay_once:1;compile=fail_once:1")
+    plan = FaultPlan.from_spec(spec)
+    again = FaultPlan.from_spec(plan.to_spec())
+    assert again.to_spec() == plan.to_spec()
+    assert again.seed == 7
+    installed = faults.install_from_env({"REPRO_FAULTS": spec})
+    assert faults.active() is installed
+    assert installed.to_spec() == plan.to_spec()
+    faults.clear()
+    assert faults.active() is None
+    assert faults.install_from_env({}) is None
+
+
+def test_unknown_site_rejected():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(0, {"nonsense.site": FaultSpec(fail_once=1)})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan.from_spec("seed=1;nope=fail_once:1")
+    assert "compile" in FAULT_SITES and "replica.crash" in FAULT_SITES
+
+
+def test_fire_without_plan_is_free():
+    payload = np.ones(4)
+    assert faults.fire("compile") is None
+    assert faults.fire("batch.numeric", payload=payload) is payload
+    assert faults.snapshot() is None
+
+
+# ------------------------------------------------- artifact integrity guard
+
+def test_corrupt_artifact_isolated_other_models_serve(tmp_path, trace):
+    from repro.serving.chaos import make_tiny_artifact
+
+    art = tmp_path / "model"
+    make_tiny_artifact(art, key=3)
+    faults.install(FaultPlan(5, {"artifact.load": FaultSpec(corrupt=1)}))
+
+    serve = SimServe(cache=CompileCache())
+    with pytest.raises(ArtifactCorrupt):
+        serve.register("rotten", str(art))  # arrival 1: corrupted bytes
+    # the guard tripped the breaker: submits fast-fail, no registration
+    assert serve.registry.breaker_snapshots()["rotten"]["state"] == "open"
+    with pytest.raises(KeyError):
+        serve.submit(trace, "rotten", n_lanes=2)
+
+    # arrival 2 is clean — the same artifact registers and serves
+    serve.register("fine", str(art))
+    h = serve.submit(trace, "fine", n_lanes=2)
+    serve.drain()
+    assert h.result().total_cycles > 0
+
+
+def test_on_disk_corruption_detected(tmp_path):
+    from repro.serving.chaos import corrupt_artifact_copy, make_tiny_artifact
+
+    from repro.checkpoint.artifact import PredictorArtifact
+
+    art = tmp_path / "model"
+    make_tiny_artifact(art, key=3)
+    PredictorArtifact.load(art)  # clean copy loads
+    bad = corrupt_artifact_copy(art, tmp_path / "rotten")
+    with pytest.raises(ArtifactCorrupt, match="sha256 mismatch"):
+        PredictorArtifact.load(bad)
+
+
+# ------------------------------------------------------------ numeric guard
+
+def test_numeric_guard_fails_poisoned_batch(trace):
+    faults.install(FaultPlan(2, {"batch.numeric": FaultSpec(corrupt=1)}))
+    serve = SimServe(cache=CompileCache())
+    serve.register("tf", sim_cfg=SimConfig(ctx_len=16))
+    h1 = serve.submit(trace, "tf", n_lanes=2)
+    with pytest.raises(Exception, match="non-finite"):
+        serve.drain()
+    assert h1.done()
+    with pytest.raises(RuntimeError, match="failed in its batch"):
+        h1.result()
+    assert serve.stats()["jobs_failed_numeric"] == 1
+    # arrival 2 is clean: a resubmit heals
+    h2 = serve.submit(trace, "tf", n_lanes=2)
+    serve.drain()
+    assert h2.result().total_cycles > 0
+
+
+# ------------------------------------------------------------ batch watchdog
+
+def test_watchdog_kills_hung_batch_loop_keeps_serving(trace):
+    # after:1 exempts the first dispatch — it compiles the executable, so
+    # the watchdog deadline only has to cover the hang, not a real build
+    faults.install(FaultPlan(4, {
+        "batch.execute": FaultSpec(after=1, delay_ms=600_000.0, delay_once=1),
+    }))
+    serve = SimServe(cache=CompileCache(), batch_timeout_s=2.0)
+    serve.register("tf", sim_cfg=SimConfig(ctx_len=16))
+    ha = serve.submit(trace, "tf", n_lanes=2)
+    serve.drain()
+    ref = ha.result().total_cycles
+
+    hb = serve.submit(trace, "tf", n_lanes=2)
+    with pytest.raises(BatchTimeout):
+        serve.drain()  # arrival 2 hangs; the watchdog fails the batch
+    with pytest.raises(RuntimeError, match="failed in its batch"):
+        hb.result()
+    assert serve.stats()["batches_timed_out"] == 1
+
+    hc = serve.submit(trace, "tf", n_lanes=2)  # arrival 3: delay spent
+    serve.drain()
+    assert hc.result().total_cycles == ref
+
+
+def test_watchdog_disabled_is_inline(trace):
+    serve = SimServe(cache=CompileCache())  # batch_timeout_s=0
+    assert serve.stats()["batch_timeout_s"] == 0.0
+    h = serve.submit(trace, n_lanes=2, sim_cfg=SimConfig(ctx_len=16))
+    serve.drain()
+    assert h.result().total_cycles > 0
+
+
+# ------------------------------------------- breaker half-open under faults
+
+def test_breaker_half_open_probe_recovers_after_compile_faults(trace):
+    t = [0.0]
+    faults.install(FaultPlan(6, {"compile": FaultSpec(fail_once=1)}))
+    serve = SimServe(cache=CompileCache(), breaker_threshold=1,
+                     breaker_reset_s=30.0, clock=lambda: t[0])
+    serve.register("tf", sim_cfg=SimConfig(ctx_len=16))
+
+    h = serve.submit(trace, "tf", n_lanes=2)
+    with pytest.raises(FaultInjected):
+        serve.drain()  # injected build failure: batch fails, breaker opens
+    assert h.done()
+    br = serve.registry.breaker_snapshots()["tf"]
+    assert br["state"] == "open"
+    with pytest.raises(ModelUnavailable):
+        serve.submit(trace, "tf", n_lanes=2)  # isolated while open
+
+    t[0] += 31.0  # cooldown elapses: exactly one half-open probe slot
+    h2 = serve.submit(trace, "tf", n_lanes=2)
+    serve.drain()  # compile arrival 2 is clean — the probe succeeds
+    assert h2.result().total_cycles > 0
+    assert serve.registry.breaker_snapshots()["tf"]["state"] == "closed"
+
+
+# --------------------------------------------------------- degraded healthz
+
+def test_healthz_degraded_with_open_breaker(trace):
+    from repro.serving.http import SimServeHTTP, http_request
+
+    serve = SimServe(cache=CompileCache())
+    serve.register("tf", sim_cfg=SimConfig(ctx_len=16))
+    with SimServeHTTP(serve) as front:
+        status, hz = http_request(f"{front.url}/v1/healthz")
+        assert (status, hz["status"]) == (200, "ok")
+        serve.registry.breaker("rotten").trip("test")
+        status, hz = http_request(f"{front.url}/v1/healthz")
+        # degraded stays 200 on purpose: the replica still serves its
+        # healthy residents — ejecting it would lose capacity for nothing
+        assert status == 200
+        assert hz["status"] == "degraded"
+        assert hz["open_breakers"] == ["rotten"]
+        # a job against a healthy resident still completes over the wire
+        h = serve.submit(trace, "tf", n_lanes=2)
+        assert h.result(timeout=120).total_cycles > 0
+    serve.stop()
+
+
+# ------------------------------------------------------ payload corruption
+
+def test_corrupt_payload_shapes():
+    plan = FaultPlan(9, {"batch.numeric": FaultSpec(corrupt=3)})
+    poisoned = plan.fire("batch.numeric", payload=np.ones(8))
+    assert np.isnan(poisoned).sum() == 1
+    ints = plan.fire("batch.numeric", payload=np.arange(4, dtype=np.int64))
+    assert (ints != np.arange(4)).sum() == 1
+    blob = plan.fire("batch.numeric", payload=b"\x00" * 16)
+    assert isinstance(blob, bytes) and blob != b"\x00" * 16
+    snap = plan.snapshot()["sites"]["batch.numeric"]
+    assert snap["corruptions"] == 3
+    # the decision log is JSON-able (the chaos drill digests it)
+    json.dumps(plan.decision_log())

@@ -218,3 +218,93 @@ def test_fleet_kill_restart_drill_subprocesses():
         )
         st, body = http_request(f"{fleet.url}/v1/healthz")
         assert st == 200 and body["healthy_replicas"] == 2
+
+
+# ------------------------------------------- graceful stop vs forced kill
+
+def test_stop_grace_sigterm_then_sigkill(tmp_path):
+    """A replica that ignores SIGTERM is SIGKILLed after ``stop_grace_s``;
+    one that honours it exits inside the grace without force."""
+    defiant = (
+        "import json, signal, time\n"
+        "signal.signal(signal.SIGTERM, signal.SIG_IGN)\n"
+        "print(json.dumps({'event': 'listening', 'port': 1}), flush=True)\n"
+        "time.sleep(600)\n"
+    )
+    r = ReplicaProcess("defiant", log_dir=str(tmp_path), stop_grace_s=0.5,
+                       cmd=[sys.executable, "-u", "-c", defiant])
+    r.spawn()
+    r.wait_listening(timeout_s=30)  # SIG_IGN is installed before this line
+    t0 = time.monotonic()
+    r.stop()
+    assert not r.alive
+    assert time.monotonic() - t0 >= 0.5  # the grace was actually granted
+
+    polite = "import time\ntime.sleep(600)\n"  # default SIGTERM kills it
+    r2 = ReplicaProcess("polite", log_dir=str(tmp_path), stop_grace_s=30.0,
+                        cmd=[sys.executable, "-u", "-c", polite])
+    r2.spawn()
+    _wait_until(lambda: r2.alive, msg="polite child up")
+    t0 = time.monotonic()
+    r2.stop()
+    assert not r2.alive
+    assert time.monotonic() - t0 < 10.0  # graceful exit, not the full grace
+
+
+def test_replica_command_carries_chaos_flags(tmp_path):
+    r = ReplicaProcess("rc", batch_timeout_s=7.5,
+                       faults_spec="seed=3;compile=fail_once:1",
+                       log_dir=str(tmp_path))
+    cmd = r.command()
+    assert cmd[cmd.index("--batch-timeout-s") + 1] == "7.5"
+    assert cmd[cmd.index("--faults") + 1] == "seed=3;compile=fail_once:1"
+    # disabled watchdog / no plan: the flags stay off the command line
+    r2 = ReplicaProcess("rc2", log_dir=str(tmp_path))
+    assert "--batch-timeout-s" not in r2.command()
+    assert "--faults" not in r2.command()
+
+
+# ------------------------------------------------------- fleet supervisor
+
+def test_supervisor_restarts_chaos_killed_replica():
+    """The supervisor's own chaos site kills a replica (deterministic,
+    seeded), then detects the corpse and restarts it under the budget —
+    counters visible through the router's aggregated /v1/stats."""
+    from repro.serving import faults
+    from repro.serving.faults import FaultPlan, FaultSpec
+
+    faults.install(FaultPlan(1, {"replica.crash": FaultSpec(fail_once=1)}))
+    try:
+        with Fleet(1, supervise=True, restart_budget=2,
+                   supervise_interval_s=0.05,
+                   restart_backoff_initial_s=0.05,
+                   restart_backoff_cap_s=0.2,
+                   probe_initial_s=0.05, probe_cap_s=0.5) as fleet:
+            _wait_until(
+                lambda: fleet.supervisor_stats()["restarts_total"] >= 1,
+                timeout=120, msg="supervised restart",
+            )
+            faults.clear()  # one kill was the drill; stop rolling the dice
+            _wait_until(lambda: fleet.replicas[0].alive, timeout=60,
+                        msg="replica back up")
+            sup = fleet.stats()["supervisor"]
+            assert sup["enabled"] is True
+            assert sup["chaos_kills"] == 1
+            assert sup["restarts"]["r0"] >= 1
+            assert sup["restart_failures"] == 0
+            _wait_until(
+                lambda: fleet.router.stats(refresh=False)["router"]["readmissions"] >= 1,
+                timeout=60, msg="restarted replica readmitted",
+            )
+    finally:
+        faults.clear()
+
+
+def test_supervisor_off_by_default_dead_stays_dead():
+    with Fleet(1, probe_initial_s=0.05, probe_cap_s=0.5) as fleet:
+        assert fleet.supervise is False
+        assert fleet.stats()["supervisor"]["enabled"] is False
+        fleet.kill_replica(0)
+        time.sleep(1.0)  # a supervisor tick would have fired many times over
+        assert not fleet.replicas[0].alive
+        assert fleet.supervisor_stats()["restarts_total"] == 0
