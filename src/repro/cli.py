@@ -556,6 +556,46 @@ def cmd_bench(args) -> int:
     return 0
 
 
+def cmd_lint(args) -> int:
+    """Domain static analysis (src/repro/analysis): lock discipline,
+    compile-cache-key completeness, determinism, exception hygiene.
+    Exit 1 on any finding not in the committed baseline."""
+    from repro import analysis
+
+    if args.list_rules:
+        _emit({"rules": [
+            {"id": r.rule_id, "family": r.family,
+             "description": r.description}
+            for r in analysis.ALL_RULES
+        ]})
+        return 0
+
+    rule_ids = None
+    if args.rules:
+        rule_ids = [r for part in args.rules for r in part.split(",") if r]
+    paths = [Path(p) for p in (args.paths or ["src"])]
+    try:
+        findings, modules = analysis.run_lint(paths, rule_ids=rule_ids)
+    except ValueError as e:  # unknown rule id
+        print(f"repro lint: {e}", file=sys.stderr)
+        return 2
+
+    baseline_path = Path(args.baseline)
+    if args.update_baseline:
+        analysis.write_baseline(baseline_path, findings, modules)
+        print(f"repro lint: wrote {len(findings)} finding(s) to "
+              f"{baseline_path}", file=sys.stderr)
+        return 0
+
+    baseline = analysis.load_baseline(baseline_path)
+    new, old, stale = analysis.split_by_baseline(findings, baseline, modules)
+    if args.format == "json":
+        _emit(analysis.render_json(new, old, stale))
+    else:
+        print(analysis.render_text(new, old, stale))
+    return 1 if new else 0
+
+
 # ---------------------------------------------------------------- parser
 
 def _common(p, n_default=10000):
@@ -741,6 +781,24 @@ def build_parser() -> argparse.ArgumentParser:
     _multicore_flags(p)
     p.add_argument("--artifact", default=None)
     p.set_defaults(fn=cmd_bench)
+
+    p = sub.add_parser(
+        "lint",
+        help="domain static analysis: lock discipline, cache-key "
+             "completeness, determinism, exception hygiene",
+    )
+    p.add_argument("paths", nargs="*", default=None,
+                   help="files/directories to lint (default: src)")
+    p.add_argument("--format", choices=["text", "json"], default="text")
+    p.add_argument("--baseline", default="lint-baseline.json",
+                   help="grandfathered-findings file (missing = empty)")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline from the current findings")
+    p.add_argument("--rules", nargs="+", default=None,
+                   help="run only these rule ids (space/comma separated)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print every registered rule as JSON and exit")
+    p.set_defaults(fn=cmd_lint)
 
     return ap
 

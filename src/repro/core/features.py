@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.des.isa import MAX_DST, MAX_SRC, N_OP_CLASSES, N_REGS
+from repro.des.isa import MAX_DST, MAX_SRC, N_REGS
 from repro.des.trace import Trace
 
 N_FEATURES = 50

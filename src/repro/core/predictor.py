@@ -23,14 +23,13 @@ as a fused Pallas kernel.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.features import N_FEATURES
-from repro.nn.init import ShardSpec, dense_init, scalar_init, split_keys
+from repro.nn.init import ShardSpec, dense_init, split_keys
 
 N_HEADS = 3  # fetch, execution, store
 REG_SCALE = 1.0 / 64.0  # regression head works in scaled-cycle space
@@ -287,6 +286,7 @@ def apply_trunk(params, x, cfg: PredictorConfig, use_kernel: bool = False):
     raise ValueError(kind)
 
 
+# repro-lint: scan-reachable — called from the sim-step under lax.scan
 def apply_raw(params, x, cfg: PredictorConfig, use_kernel: bool = False):
     """(B, N, 50) -> raw head outputs (B, out_dim)."""
     h, head = apply_trunk(params, x, cfg, use_kernel=use_kernel)
@@ -302,6 +302,7 @@ def split_heads(raw, cfg: PredictorConfig):
     return None, raw
 
 
+# repro-lint: scan-reachable — called from the sim-step under lax.scan
 def decode_latency(raw, cfg: PredictorConfig):
     """Hybrid decode (paper §2.3): argmax class if < overflow else regression.
     Returns (B, 3) float latencies (regression head is in REG_SCALE space)."""

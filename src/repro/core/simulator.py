@@ -42,7 +42,6 @@ of one `segment_sum` over the lane axis.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
@@ -462,6 +461,7 @@ def make_sim_scan(
     multi-workload path uses this so memory stays O(state), not O(T).
     """
 
+    # repro-lint: scan-reachable — runs under lax.scan inside jit
     def step(state, xs):
         cur = {"feat": xs["feat"], "addr": xs["addr"], "is_store": xs["is_store"]}
         if predict_state_fn is not None:

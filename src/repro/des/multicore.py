@@ -33,7 +33,6 @@ the traces are bit-identical, which the golden tests pin.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import List, Optional, Sequence, Tuple
 
 from repro.des.branch import make_predictor

@@ -8,7 +8,6 @@ precision fp32.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

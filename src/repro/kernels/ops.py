@@ -8,11 +8,10 @@ the same kernels natively — the flag is resolved from the backend).
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.cnn_trunk import cnn_trunk_pallas
 from repro.kernels.conv2s import conv2s_pallas

@@ -13,16 +13,13 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import get_config, get_reduced_config
 from repro.data.pipeline import TokenLoader
-from repro.launch import specs as specs_lib
 from repro.models.registry import build_model
 from repro.runtime import elastic
 from repro.runtime import sharding as sh

@@ -6,9 +6,7 @@ expressed with traced per-layer scalars fed as scan xs.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,7 @@
 """Uniform model interface over the architecture families."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 from repro.configs.base import ModelConfig
 from repro.models import hybrid, lm, rwkv, whisper

@@ -16,7 +16,6 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.nn import rope as rope_lib
 from repro.nn.init import dense_init, split_keys
 from repro.nn.layers import rmsnorm, rmsnorm_params
 

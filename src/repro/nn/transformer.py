@@ -6,8 +6,7 @@ lower through a single scan-over-layers body.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ the new topology.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Tuple
 
 import jax
 

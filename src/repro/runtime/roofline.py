@@ -11,7 +11,7 @@ total/8 on an 8-device mesh). Collective bytes come from runtime.hlo.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip

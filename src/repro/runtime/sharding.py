@@ -15,7 +15,7 @@ Logical axes used by param ShardSpecs and activation constraints:
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Callable, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -106,14 +106,14 @@ class CompileCache:
     """
 
     def __init__(self):
-        self._entries: Dict[ExecutableKey, Callable] = {}
         self._lock = threading.Lock()
-        self._inflight: Dict[ExecutableKey, concurrent.futures.Future] = {}
-        self._generation = 0  # bumped by clear(); stale builds don't land
-        self._hits = 0
-        self._misses = 0
-        self._compile_seconds = 0.0
-        self._per_key: Dict[ExecutableKey, Dict[str, Any]] = {}
+        self._entries: Dict[ExecutableKey, Callable] = {}  # guarded-by: _lock
+        self._inflight: Dict[ExecutableKey, concurrent.futures.Future] = {}  # guarded-by: _lock
+        self._generation = 0  # guarded-by: _lock — bumped by clear(); stale builds don't land
+        self._hits = 0  # guarded-by: _lock
+        self._misses = 0  # guarded-by: _lock
+        self._compile_seconds = 0.0  # guarded-by: _lock
+        self._per_key: Dict[ExecutableKey, Dict[str, Any]] = {}  # guarded-by: _lock
 
     def get(self, key: ExecutableKey, builder: Callable[[], Callable]) -> Callable:
         with self._lock:

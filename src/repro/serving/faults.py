@@ -1,5 +1,6 @@
 """Deterministic, seeded fault injection for the serving stack.
 
+from __future__ import annotations
 The chaos plane is a process-wide :class:`FaultPlan`: a seed plus a map of
 *fault sites* to :class:`FaultSpec` triggers.  Production code calls
 :func:`fire` at named seams; with no plan installed the call is a counter-free
@@ -35,7 +36,6 @@ i.e. ``;``-separated ``site=trigger:value,...`` clauses plus an optional
 fleet hands a plan to replica subprocesses.
 """
 
-from __future__ import annotations
 
 import dataclasses
 import random

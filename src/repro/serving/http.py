@@ -335,7 +335,9 @@ class JsonHandler(BaseHTTPRequestHandler):
             self._send(e.status, e.body())
         except BrokenPipeError:  # client went away mid-response
             pass
-        except Exception as e:  # pragma: no cover - defensive
+        # HTTP boundary: any unhandled bug must become a 500 for THIS
+        # client, never a dead connection or a dead server thread
+        except Exception as e:  # pragma: no cover - defensive  # repro-lint: disable=hygiene-broad-except — boundary turns any bug into a logged 500
             log_event("http.error", level=logging.ERROR, path=self.path,
                       error=repr(e))
             self._send(500, {"error": {"type": "internal", "message": repr(e)}})

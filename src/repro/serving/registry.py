@@ -60,8 +60,8 @@ class ModelRegistry:
         self.breaker_reset_s = float(breaker_reset_s)
         self._clock = clock
         self._lock = threading.RLock()  # add() nests into add_engine()
-        self._engines: Dict[str, SimNetEngine] = {}
-        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._engines: Dict[str, SimNetEngine] = {}  # guarded-by: _lock
+        self._breakers: Dict[str, CircuitBreaker] = {}  # guarded-by: _lock
 
     # ------------------------------------------------------------- admission
 

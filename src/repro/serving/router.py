@@ -149,12 +149,12 @@ class FleetRouter:
         ]
         self._by_name = {r.name: r for r in self.replicas}
         self._lock = threading.RLock()
-        self._jobs_routed = 0
-        self._routed_per_replica = {r.name: 0 for r in self.replicas}
-        self._failovers = 0  # candidates skipped past (429 or ejection)
-        self._ejections = 0
-        self._readmissions = 0
-        self._jobs_unroutable = 0  # no candidate could take the job
+        self._jobs_routed = 0  # guarded-by: _lock
+        self._routed_per_replica = {r.name: 0 for r in self.replicas}  # guarded-by: _lock
+        self._failovers = 0  # guarded-by: _lock — candidates skipped past (429 or ejection)
+        self._ejections = 0  # guarded-by: _lock
+        self._readmissions = 0  # guarded-by: _lock
+        self._jobs_unroutable = 0  # guarded-by: _lock — no candidate could take the job
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
         self._prober: Optional[threading.Thread] = None
@@ -522,7 +522,7 @@ class FleetRouter:
         if hook is not None:
             try:
                 out["supervisor"] = hook()
-            except Exception as e:  # stats must not die on a hook bug
+            except Exception as e:  # repro-lint: disable=hygiene-broad-except — user-supplied hook; stats must not die on a hook bug
                 out["supervisor"] = {"error": repr(e)}
         return out
 

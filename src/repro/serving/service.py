@@ -72,7 +72,7 @@ from repro.serving.compile_cache import (
     lane_bucket,
 )
 from repro.serving import faults
-from repro.serving.registry import ModelRegistry, TEACHER_FORCED
+from repro.serving.registry import ModelRegistry
 from repro.serving.simnet_engine import NumericError
 from repro.serving.telemetry import Telemetry, log_event, new_correlation_id
 
@@ -316,29 +316,29 @@ class SimServe:
         self.batch_timeout_s = float(batch_timeout_s)
         self.telemetry = Telemetry(clock=clock)
         self._qlock = threading.Lock()  # guards _pending + counters + _rr
-        self._pending: List[_Job] = []
-        self._next_id = 0
-        self._last_model: Optional[str] = None  # round-robin cursor
+        self._pending: List[_Job] = []  # guarded-by: _qlock
+        self._next_id = 0  # guarded-by: _qlock
+        self._last_model: Optional[str] = None  # guarded-by: _qlock — round-robin cursor
         # recent dispatch history only — a resident service must not grow
         # per-batch state without bound; aggregates live in the counters
-        self._batches: collections.deque = collections.deque(maxlen=256)
-        self._n_batches = 0
-        self._jobs_submitted = 0
-        self._jobs_completed = 0
-        self._jobs_rejected = 0  # QueueFull refusals (admission honesty)
-        self._jobs_expired = 0  # deadline_ms ran out before dispatch
-        self._jobs_breaker_rejected = 0  # open-breaker fast-fails at submit
-        self._jobs_failed_numeric = 0  # numeric-guard batch failures
-        self._batches_timed_out = 0  # watchdog kills
-        self._lanes_live = 0
-        self._lanes_dispatched = 0
-        self._dead_lane_steps = 0  # bucketing overhead, for stats honesty
+        self._batches: collections.deque = collections.deque(maxlen=256)  # guarded-by: _qlock
+        self._n_batches = 0  # guarded-by: _qlock
+        self._jobs_submitted = 0  # guarded-by: _qlock
+        self._jobs_completed = 0  # guarded-by: _qlock
+        self._jobs_rejected = 0  # guarded-by: _qlock — QueueFull refusals (admission honesty)
+        self._jobs_expired = 0  # guarded-by: _qlock — deadline_ms ran out before dispatch
+        self._jobs_breaker_rejected = 0  # guarded-by: _qlock — open-breaker fast-fails at submit
+        self._jobs_failed_numeric = 0  # guarded-by: _qlock — numeric-guard batch failures
+        self._batches_timed_out = 0  # guarded-by: _qlock — watchdog kills
+        self._lanes_live = 0  # guarded-by: _qlock
+        self._lanes_dispatched = 0  # guarded-by: _qlock
+        self._dead_lane_steps = 0  # guarded-by: _qlock — bucketing overhead, for stats honesty
         # background drain loop
         self._lifecycle = threading.Lock()  # start/stop vs start/stop only
         self._thread: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
         self._wake = threading.Event()
-        self._loop_errors = 0  # batch failures the loop absorbed
+        self._loop_errors = 0  # guarded-by: _qlock — batch failures the loop absorbed
 
     # ----------------------------------------------------------- admission
 
@@ -875,13 +875,20 @@ class SimServe:
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        # len() alone is atomic under the GIL, but the drain loop swaps
+        # _pending wholesale in _take_batch — take the lock so a reader
+        # never sees the queue mid-swap
+        with self._qlock:
+            return len(self._pending)
 
     @property
     def batches(self) -> Tuple[BatchReport, ...]:
         """The most recent dispatches (bounded history; counters in
         ``stats()`` cover the service's whole lifetime)."""
-        return tuple(self._batches)
+        # the drain loop appends concurrently; tuple(deque) mid-append
+        # can raise or tear — snapshot under the queue lock
+        with self._qlock:
+            return tuple(self._batches)
 
     def stats(self) -> Dict[str, Any]:
         """A consistent snapshot of the service counters.

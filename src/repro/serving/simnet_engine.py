@@ -141,6 +141,7 @@ class SimNetEngine:
         self.params = params
         self._params_staged = params is None  # nothing to stage teacher-forced
 
+        # repro-lint: scan-reachable — the jitted per-chunk body
         def run_chunk(p, state: SimState, xs, retire_width, lane_ctx):
             predict = predict_state = None
             if self.pcfg is not None:

@@ -16,7 +16,6 @@ Used by the train driver as a drop-in around the gradient tree:
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

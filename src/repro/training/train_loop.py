@@ -4,8 +4,6 @@ rule tables in runtime.sharding.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,122 @@
+"""Dynamic twin of the static `cache-key-field` rule.
+
+The static rule proves every config field *read on the compiled path* is
+covered by ExecutableKey; this test proves, from the runtime side, that
+perturbing any SimConfig/PredictorConfig field actually mints a distinct
+key — i.e. the coverage is real, not accidental. A field may only be
+exempt by carrying the same `# cache-key: irrelevant` marker the static
+rule honors (`repro.analysis.key_irrelevant_fields` reads it), so the
+two enforcers can never drift apart.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis import key_irrelevant_fields
+from repro.core.predictor import PredictorConfig
+from repro.core.simulator import SimConfig
+from repro.serving.compile_cache import CompileCache, ExecutableKey
+
+# field -> replacement value, where the default can't just be bumped
+_PERTURB = {
+    "kind": "rb7",
+    "output": "reg",
+    "layout": "roll",
+    "state_dtype": "bfloat16",
+    "compute_dtype": "bfloat16",
+    "channels": (32, 128, 128),
+}
+
+
+def _perturbed(cfg, field: dataclasses.Field):
+    cur = getattr(cfg, field.name)
+    if field.name in _PERTURB:
+        new = _PERTURB[field.name]
+    elif isinstance(cur, bool):
+        new = not cur
+    elif isinstance(cur, int):
+        new = cur + 1
+    elif isinstance(cur, float):
+        new = cur * 2 + 1
+    elif isinstance(cur, tuple):
+        new = cur + cur[-1:]
+    else:
+        raise AssertionError(
+            f"no perturbation strategy for {type(cfg).__name__}."
+            f"{field.name} ({type(cur).__name__}) — add one to _PERTURB")
+    assert new != cur
+    return dataclasses.replace(cfg, **{field.name: new})
+
+
+def _base_key(**overrides):
+    kw = dict(predictor=PredictorConfig(), sim_cfg=SimConfig(),
+              n_lanes=8, chunk=256, mesh=None, use_kernel=False)
+    kw.update(overrides)
+    return ExecutableKey(**kw)
+
+
+def _config_cases():
+    for cls, key_field in ((SimConfig, "sim_cfg"),
+                           (PredictorConfig, "predictor")):
+        exempt = key_irrelevant_fields(cls)
+        for f in dataclasses.fields(cls):
+            yield pytest.param(cls, key_field, f, f.name in exempt,
+                               id=f"{cls.__name__}.{f.name}")
+
+
+@pytest.mark.parametrize("cls,key_field,field,exempt", _config_cases())
+def test_each_config_field_mints_a_distinct_key(cls, key_field, field,
+                                                exempt):
+    if exempt:
+        pytest.skip(f"{cls.__name__}.{field.name} is marked "
+                    "'# cache-key: irrelevant'")
+    base = _base_key()
+    pert = _base_key(**{key_field: _perturbed(getattr(base, key_field),
+                                              field)})
+    assert pert != base, (
+        f"perturbing {cls.__name__}.{field.name} did not change the "
+        "compile-cache key — a cached executable would be reused across "
+        "different values of it")
+    assert len({base, pert}) == 2  # distinct under hashing too
+
+
+@pytest.mark.parametrize("cls,key_field,field,exempt", _config_cases())
+def test_each_config_field_causes_a_cache_miss(cls, key_field, field,
+                                               exempt):
+    """End to end through CompileCache: the perturbed key must invoke the
+    builder again, never reuse the base executable."""
+    if exempt:
+        pytest.skip(f"{cls.__name__}.{field.name} is marked "
+                    "'# cache-key: irrelevant'")
+    cache = CompileCache()
+    built = []
+
+    def builder():
+        built.append(1)
+        return lambda *a: None
+
+    base = _base_key()
+    pert = _base_key(**{key_field: _perturbed(getattr(base, key_field),
+                                              field)})
+    cache.get(base, builder)
+    cache.get(pert, builder)
+    cache.get(base, builder)  # and the base entry is still a hit
+    assert len(built) == 2
+
+
+def test_engine_scalars_mint_distinct_keys():
+    """The non-config scalars on the key (lane bucket, chunk, mesh,
+    use_kernel) separate executables too."""
+    base = _base_key()
+    assert _base_key(n_lanes=16) != base
+    assert _base_key(chunk=512) != base
+    assert _base_key(use_kernel=True) != base
+    assert _base_key(mesh=(("data",), (2,), (0, 1))) != base
+
+
+def test_no_field_is_currently_exempt():
+    """Today every config field is key-relevant. If you mark one
+    '# cache-key: irrelevant', delete this test and say why in the
+    commit message."""
+    assert key_irrelevant_fields(SimConfig) == set()
+    assert key_irrelevant_fields(PredictorConfig) == set()

@@ -1,0 +1,601 @@
+"""Self-tests for `repro lint` (src/repro/analysis).
+
+Every rule family gets a known-bad fixture that MUST fire and a
+corrected twin that MUST stay silent — including the PR 6 torn-stats
+race shape (counters read outside the lock by stats()) and an
+ExecutableKey that omits a config field. Fixtures are written to
+tmp_path so the linter sees them as a tiny standalone project; scope
+markers (`# repro-lint: deterministic`, `# repro-lint: compiled-path`)
+put them in rule scope without living under src/.
+
+Also here: the suppression/baseline semantics, the CLI surface, the
+real-tree gate (src/ must be clean against the committed baseline), and
+failing-before regression tests for the two true positives the lock rule
+found in SimServe.
+"""
+import json
+import sys
+import threading
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    core,
+    lint_paths,
+    load_baseline,
+    run_lint,
+    rules_by_id,
+    split_by_baseline,
+    write_baseline,
+)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _lint(tmp_path, sources, rules=None):
+    """Write {name: source} into tmp_path and lint the directory."""
+    for name, src in sources.items():
+        (tmp_path / name).write_text(textwrap.dedent(src))
+    return lint_paths([tmp_path], root=tmp_path, rule_ids=rules)
+
+
+def _rules_fired(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------------------ locks
+
+TORN_STATS_BAD = """
+    import threading
+
+    class Serve:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._done = 0  # guarded-by: _lock
+            self._failed = 0  # guarded-by: _lock
+
+        def record(self):
+            with self._lock:
+                self._done += 1
+                self._failed += 1
+
+        def stats(self):
+            # PR 6 shape: multi-counter read with no lock — a concurrent
+            # record() can be observed halfway through (torn stats)
+            return {"done": self._done, "failed": self._failed}
+"""
+
+TORN_STATS_FIXED = """
+    import threading
+
+    class Serve:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._done = 0  # guarded-by: _lock
+            self._failed = 0  # guarded-by: _lock
+
+        def record(self):
+            with self._lock:
+                self._done += 1
+                self._failed += 1
+
+        def stats(self):
+            with self._lock:
+                return {"done": self._done, "failed": self._failed}
+"""
+
+
+def test_lock_rule_fires_on_torn_stats_shape(tmp_path):
+    findings = _lint(tmp_path, {"serve.py": TORN_STATS_BAD})
+    lock_findings = [f for f in findings if f.rule == "lock-guarded-field"]
+    assert len(lock_findings) == 2  # _done and _failed, both in stats()
+    assert all("stats" in f.symbol for f in lock_findings)
+
+
+def test_lock_rule_silent_on_fixed_version(tmp_path):
+    assert _lint(tmp_path, {"serve.py": TORN_STATS_FIXED}) == []
+
+
+def test_lock_rule_proves_private_method_called_under_lock(tmp_path):
+    src = """
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._items = []  # guarded-by: _lock
+
+            def push(self, x):
+                with self._lock:
+                    self._push_locked(x)
+
+            def pop(self):
+                with self._lock:
+                    self._push_locked(None)
+                    return self._items.pop()
+
+            def _push_locked(self, x):
+                # no lexical lock here — but every call site holds it
+                self._items.append(x)
+    """
+    assert _lint(tmp_path, {"q.py": src}) == []
+
+
+def test_lock_rule_rejects_private_method_with_unlocked_call_site(tmp_path):
+    src = """
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._items = []  # guarded-by: _lock
+
+            def push(self, x):
+                with self._lock:
+                    self._push_locked(x)
+
+            def sneak(self, x):
+                self._push_locked(x)  # no lock: breaks the proof
+
+            def _push_locked(self, x):
+                self._items.append(x)
+    """
+    findings = _lint(tmp_path, {"q.py": src})
+    assert _rules_fired(findings) == {"lock-guarded-field"}
+    assert any(f.symbol == "Q._push_locked" for f in findings)
+
+
+def test_lock_rule_nested_function_does_not_inherit_lock(tmp_path):
+    # a closure may run on another thread after the with-block exits
+    src = """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded-by: _lock
+
+            def go(self):
+                with self._lock:
+                    def worker():
+                        self._n += 1
+                    return worker
+    """
+    findings = _lint(tmp_path, {"s.py": src})
+    assert _rules_fired(findings) == {"lock-guarded-field"}
+
+
+def test_lock_annotation_typo_is_flagged(tmp_path):
+    src = """
+        import threading
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded-by: _lcok
+    """
+    findings = _lint(tmp_path, {"s.py": src})
+    assert "lock-annotation-unknown" in _rules_fired(findings)
+
+
+# --------------------------------------------------------------- cachekey
+
+CONFIGS_FIXTURE = """
+    import dataclasses
+    from typing import Tuple
+
+    @dataclasses.dataclass(frozen=True)
+    class SimConfig:
+        ctx_len: int = 64
+        layout: str = "ring"
+
+    @dataclasses.dataclass(frozen=True)
+    class PredictorConfig:
+        kind: str = "c3"
+"""
+
+KEY_OMITS_LAYOUT = """
+    import dataclasses
+    from typing import Optional
+    from configs import PredictorConfig
+
+    @dataclasses.dataclass(frozen=True)
+    class ExecutableKey:
+        predictor: Optional[PredictorConfig]
+        ctx_len: int  # scalar copy — layout is MISSING
+        n_lanes: int
+"""
+
+KEY_WHOLE_CONFIG = """
+    import dataclasses
+    from typing import Optional
+    from configs import PredictorConfig, SimConfig
+
+    @dataclasses.dataclass(frozen=True)
+    class ExecutableKey:
+        predictor: Optional[PredictorConfig]
+        sim_cfg: SimConfig
+        n_lanes: int
+"""
+
+ENGINE_FIXTURE = """
+    # repro-lint: compiled-path
+    from configs import SimConfig
+
+    def step(state, xs, cfg: SimConfig):
+        if cfg.layout == "ring":
+            return state + cfg.ctx_len
+        return state
+"""
+
+
+def test_cache_key_rule_fires_when_key_omits_config_field(tmp_path):
+    findings = _lint(tmp_path, {
+        "configs.py": CONFIGS_FIXTURE,
+        "key.py": KEY_OMITS_LAYOUT,
+        "engine.py": ENGINE_FIXTURE,
+    })
+    key_findings = [f for f in findings if f.rule == "cache-key-field"]
+    assert len(key_findings) == 1
+    assert "SimConfig.layout" in key_findings[0].message
+    # ctx_len is covered by the same-named scalar — only layout fires
+
+
+def test_cache_key_rule_silent_when_key_embeds_whole_config(tmp_path):
+    findings = _lint(tmp_path, {
+        "configs.py": CONFIGS_FIXTURE,
+        "key.py": KEY_WHOLE_CONFIG,
+        "engine.py": ENGINE_FIXTURE,
+    })
+    assert [f for f in findings if f.rule == "cache-key-field"] == []
+
+
+def test_cache_key_rule_honors_irrelevant_marker(tmp_path):
+    configs = CONFIGS_FIXTURE.replace(
+        'layout: str = "ring"',
+        'layout: str = "ring"  # cache-key: irrelevant',
+    )
+    findings = _lint(tmp_path, {
+        "configs.py": configs,
+        "key.py": KEY_OMITS_LAYOUT,
+        "engine.py": ENGINE_FIXTURE,
+    })
+    assert [f for f in findings if f.rule == "cache-key-field"] == []
+
+
+TRACER_BAD = """
+    # repro-lint: compiled-path
+    import time
+    import numpy as np
+    import jax
+
+    # repro-lint: scan-reachable
+    def step(state, xs):
+        t = time.time()
+        s = np.sum(xs)
+        v = state.item()
+        f = float(xs)
+        return state + s + v + f + t
+"""
+
+TRACER_GOOD = """
+    # repro-lint: compiled-path
+    import jax.numpy as jnp
+    from configs import SimConfig
+
+    # repro-lint: scan-reachable
+    def step(state, xs, cfg: SimConfig):
+        scale = float(cfg.ctx_len - 1)  # config-derived: static at trace time
+        n = int(xs.shape[0])            # shape math is static too
+        return state + jnp.sum(xs) * scale + n
+"""
+
+
+def test_tracer_rule_fires_on_host_syncs(tmp_path):
+    findings = _lint(tmp_path, {"engine.py": TRACER_BAD},
+                     rules=["cache-tracer-hazard"])
+    assert len(findings) == 4  # time.time, np.sum, .item(), float()
+
+
+def test_tracer_rule_exempts_static_config_math(tmp_path):
+    findings = _lint(tmp_path, {
+        "configs.py": CONFIGS_FIXTURE,
+        "engine.py": TRACER_GOOD,
+    }, rules=["cache-tracer-hazard"])
+    assert findings == []
+
+
+def test_tracer_rule_follows_scan_first_arg_and_local_calls(tmp_path):
+    src = """
+        # repro-lint: compiled-path
+        import jax
+        import numpy as np
+
+        def helper(x):
+            return np.asarray(x)  # hazard, two hops from the scan
+
+        def body(state, xs):
+            return helper(state), None
+
+        def run(state, xs):
+            return jax.lax.scan(body, state, xs)
+    """
+    findings = _lint(tmp_path, {"engine.py": src},
+                     rules=["cache-tracer-hazard"])
+    assert len(findings) == 1 and findings[0].symbol == "helper"
+
+
+# ------------------------------------------------------------ determinism
+
+def test_determinism_rules_fire_on_bad_fixture(tmp_path):
+    src = """
+        # repro-lint: deterministic
+        import time
+        import random
+        import numpy as np
+
+        def emit(ids):
+            stamp = time.time()
+            jitter = random.random()
+            rng = np.random.default_rng()
+            order = [x for x in set(ids)]
+            return stamp, jitter, rng, order
+    """
+    fired = _rules_fired(_lint(tmp_path, {"des.py": src}))
+    assert fired == {"det-wall-clock", "det-unseeded-random",
+                     "det-unordered-iter"}
+
+
+def test_determinism_rules_silent_on_corrected_fixture(tmp_path):
+    src = """
+        # repro-lint: deterministic
+        import time
+        import random
+        import numpy as np
+
+        def emit(ids, seed, now):
+            time.sleep(0)                       # pacing is allowed
+            jitter = random.Random(seed).random()
+            rng = np.random.default_rng(seed)
+            order = [x for x in sorted(set(ids))]
+            return now, jitter, rng, order
+    """
+    assert _lint(tmp_path, {"des.py": src}) == []
+
+
+def test_determinism_tracks_set_valued_locals(tmp_path):
+    src = """
+        # repro-lint: deterministic
+        def emit(a, b):
+            pendING = set(a) - set(b)
+            return list(pendING)
+    """
+    fired = _rules_fired(_lint(tmp_path, {"des.py": src}))
+    assert fired == {"det-unordered-iter"}
+
+
+def test_determinism_scope_is_marker_or_glob(tmp_path):
+    # same bad code, no marker, not under des/: out of scope, silent
+    src = """
+        import time
+
+        def emit():
+            return time.time()
+    """
+    assert _lint(tmp_path, {"other.py": src}) == []
+
+
+# ---------------------------------------------------------------- hygiene
+
+def test_hygiene_fires_on_swallowing_broad_except(tmp_path):
+    src = """
+        def f():
+            try:
+                return 1
+            except Exception:
+                pass
+    """
+    fired = _rules_fired(_lint(tmp_path, {"h.py": src}))
+    assert fired == {"hygiene-broad-except"}
+
+
+def test_hygiene_exempts_reraise_and_narrow_handlers(tmp_path):
+    src = """
+        def f():
+            try:
+                return g()
+            except Exception:
+                cleanup()
+                raise
+
+        def h():
+            try:
+                return g()
+            except (ValueError, KeyError):
+                return None
+    """
+    assert _lint(tmp_path, {"h.py": src}) == []
+
+
+# ------------------------------------------- suppressions, baseline, CLI
+
+def test_inline_suppression_silences_one_line(tmp_path):
+    src = """
+        def f():
+            try:
+                return 1
+            except Exception:  # repro-lint: disable=hygiene-broad-except — fixture
+                pass
+
+        def g():
+            try:
+                return 1
+            except Exception:
+                pass
+    """
+    findings = _lint(tmp_path, {"h.py": src})
+    assert len(findings) == 1 and findings[0].symbol == ""
+    assert findings[0].line > 5  # only g()'s handler survives
+
+
+def test_suppression_on_preceding_comment_line(tmp_path):
+    src = """
+        def f():
+            try:
+                return 1
+            # repro-lint: disable=hygiene-broad-except
+            except Exception:
+                pass
+    """
+    assert _lint(tmp_path, {"h.py": src}) == []
+
+
+def test_baseline_grandfathers_existing_findings(tmp_path):
+    (tmp_path / "h.py").write_text(textwrap.dedent("""
+        def f():
+            try:
+                return 1
+            except Exception:
+                pass
+    """))
+    findings, modules = run_lint([tmp_path], root=tmp_path)
+    assert len(findings) == 1
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(bl_path, findings, modules)
+
+    # same tree: baselined, nothing new
+    new, old, stale = split_by_baseline(findings, load_baseline(bl_path),
+                                        modules)
+    assert (len(new), len(old), stale) == (0, 1, 0)
+
+    # add a second offender: only IT is new
+    (tmp_path / "h2.py").write_text(textwrap.dedent("""
+        def g():
+            try:
+                return 2
+            except Exception:
+                pass
+    """))
+    findings2, modules2 = run_lint([tmp_path], root=tmp_path)
+    new, old, stale = split_by_baseline(findings2, load_baseline(bl_path),
+                                        modules2)
+    assert (len(new), len(old), stale) == (1, 1, 0)
+    assert new[0].path == "h2.py"
+
+    # fingerprints survive the finding moving to a different line
+    (tmp_path / "h.py").write_text(
+        "# a new comment shifts every line\n"
+        + (tmp_path / "h.py").read_text())
+    findings3, modules3 = run_lint([tmp_path], root=tmp_path)
+    old_only = [f for f in findings3 if f.path == "h.py"]
+    new, old, stale = split_by_baseline(old_only, load_baseline(bl_path),
+                                        modules3)
+    assert (len(new), len(old)) == (0, 1)
+
+
+def test_unknown_rule_id_raises(tmp_path):
+    with pytest.raises(ValueError, match="unknown rule"):
+        _lint(tmp_path, {"x.py": "pass"}, rules=["no-such-rule"])
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    findings = _lint(tmp_path, {"bad.py": "def f(:\n"})
+    assert [f.rule for f in findings] == ["parse-error"]
+
+
+def test_registry_has_all_documented_rules():
+    assert set(rules_by_id()) == {
+        "lock-guarded-field", "lock-annotation-unknown",
+        "cache-key-field", "cache-tracer-hazard",
+        "det-wall-clock", "det-unseeded-random", "det-unordered-iter",
+        "hygiene-broad-except",
+    }
+
+
+def test_cli_lint_list_rules(capsys):
+    from repro.cli import main
+    assert main(["lint", "--list-rules"]) == 0
+    data = json.loads(capsys.readouterr().out)
+    assert {r["id"] for r in data["rules"]} == set(rules_by_id())
+
+
+def test_cli_lint_exit_codes(tmp_path, capsys, monkeypatch):
+    from repro.cli import main
+    (tmp_path / "h.py").write_text(
+        "try:\n    pass\nexcept Exception:\n    pass\n")
+    monkeypatch.chdir(tmp_path)
+    assert main(["lint", "h.py", "--format", "json"]) == 1
+    out = json.loads(capsys.readouterr().out)
+    assert out["counts"]["new"] == 1 and not out["ok"]
+    # park it in the baseline: gate goes green
+    assert main(["lint", "h.py", "--update-baseline"]) == 0
+    assert main(["lint", "h.py"]) == 0
+
+
+# ------------------------------------------------------- real-tree gates
+
+def test_real_tree_is_clean_against_committed_baseline():
+    """THE acceptance gate: `python -m repro lint` on src/ has no new
+    findings relative to the committed baseline."""
+    findings, modules = run_lint([REPO_ROOT / "src"], root=REPO_ROOT)
+    baseline = load_baseline(REPO_ROOT / "lint-baseline.json")
+    new, _, _ = split_by_baseline(findings, baseline, modules)
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+def test_analysis_package_is_stdlib_only():
+    """The lint gate must be runnable without the JAX stack: nothing in
+    repro.analysis may import jax/numpy, even lazily at module scope."""
+    for mod in sorted((REPO_ROOT / "src/repro/analysis").glob("*.py")):
+        info = core.ModuleInfo(mod, REPO_ROOT)
+        import ast
+        for node in ast.walk(info.tree):
+            names = []
+            if isinstance(node, ast.Import):
+                names = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                names = [node.module or ""]
+            for n in names:
+                top = n.split(".")[0]
+                assert top not in ("jax", "numpy", "repro"), (
+                    f"{info.relpath} imports {n}")
+
+
+# ------------------------- regression tests for the fixed true positives
+
+def _locked_property_blocks(serve, read):
+    """True iff `read` (a zero-arg callable touching serve state) blocks
+    while serve._qlock is held — i.e. the accessor takes the lock."""
+    got = []
+    serve._qlock.acquire()
+    try:
+        t = threading.Thread(target=lambda: got.append(read()), daemon=True)
+        t.start()
+        t.join(0.3)
+        blocked = t.is_alive()
+    finally:
+        serve._qlock.release()
+    t.join(2.0)
+    assert not t.is_alive()
+    return blocked
+
+
+@pytest.fixture()
+def _serve():
+    from repro.serving.compile_cache import CompileCache
+    from repro.serving.service import SimServe
+    return SimServe(cache=CompileCache())
+
+
+def test_simserve_pending_takes_qlock(_serve):
+    """Failing before the PR 10 fix: `pending` read `self._pending` with
+    no lock, so it could observe the queue mid-swap during _take_batch."""
+    assert _locked_property_blocks(_serve, lambda: _serve.pending)
+
+
+def test_simserve_batches_takes_qlock(_serve):
+    """Failing before the PR 10 fix: `batches` materialized the deque
+    unlocked while the drain loop appends concurrently."""
+    assert _locked_property_blocks(_serve, lambda: _serve.batches)
